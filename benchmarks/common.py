@@ -1,0 +1,25 @@
+"""Shared helpers for the paper-figure benchmarks: CSV emission + claim
+checks.  Every fig4*.py writes artifacts/bench/<name>.csv and returns a
+dict of validated claims for run.py's summary."""
+
+from __future__ import annotations
+
+import csv
+import pathlib
+
+OUTDIR = pathlib.Path("artifacts/bench")
+
+
+def write_csv(name: str, header: list[str], rows: list[list]) -> pathlib.Path:
+    OUTDIR.mkdir(parents=True, exist_ok=True)
+    path = OUTDIR / f"{name}.csv"
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def claim(results: dict, name: str, ok: bool, detail: str):
+    results[name] = {"ok": bool(ok), "detail": detail}
+    print(f"  [{'PASS' if ok else 'FAIL'}] {name}: {detail}")

@@ -1,0 +1,113 @@
+"""Run the full dry-run matrix: every (arch × applicable shape × mesh).
+
+Each cell runs in its own subprocess (jax locks the forced 512-device count
+at first init) and writes artifacts/dryrun/<arch>__<shape>__<pod>.json.
+Already-present artifacts are skipped (delete to re-run), so this driver is
+resumable and can be re-invoked after perf iterations with --tag.
+
+    PYTHONPATH=src python benchmarks/dryrun_all.py [--only-pod1] [--arch A]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+from repro import configs  # noqa: E402
+
+
+def cells():
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get(arch)
+        for shape in configs.SHAPES:
+            if configs.shape_applicable(cfg, shape):
+                yield arch, shape
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only-pod1", action="store_true")
+    ap.add_argument("--only-pod2", action="store_true")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--set", nargs="*", dest="overrides", default=None)
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    pods = [False, True]
+    if args.only_pod1:
+        pods = [False]
+    if args.only_pod2:
+        pods = [True]
+
+    todo = []
+    for arch, shape in cells():
+        if args.arch and arch != args.arch:
+            continue
+        if args.shape and shape != args.shape:
+            continue
+        for mp in pods:
+            name = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+            if args.tag:
+                name += f"__{args.tag}"
+            path = outdir / f"{name}.json"
+            if path.exists():
+                if json.loads(path.read_text()).get("ok"):
+                    print(f"skip (cached): {name}")
+                    continue
+                path.unlink()          # retry failures
+            todo.append((arch, shape, mp, name))
+
+    print(f"{len(todo)} cells to run")
+    t_all = time.time()
+    failures = []
+    for i, (arch, shape, mp, name) in enumerate(todo):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", str(outdir)]
+        if mp:
+            cmd.append("--multi-pod")
+        if args.tag:
+            cmd += ["--tag", args.tag]
+        if args.overrides:
+            cmd += ["--set", *args.overrides]
+        t0 = time.time()
+        print(f"[{i + 1}/{len(todo)}] {name} ...", flush=True)
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout,
+                               env={"PYTHONPATH": "src",
+                                    "PATH": "/usr/bin:/bin:/usr/local/bin"})
+            ok = r.returncode == 0
+        except subprocess.TimeoutExpired:
+            ok = False
+            r = None
+        dt = time.time() - t0
+        if not ok:
+            failures.append(name)
+            tail = (r.stdout + r.stderr)[-2000:] if r else "TIMEOUT"
+            print(f"  FAILED in {dt:.0f}s\n{tail}", flush=True)
+        else:
+            art = json.loads((outdir / f"{name}.json").read_text())
+            rf = art.get("roofline", {})
+            print(f"  ok in {dt:.0f}s  bottleneck={rf.get('bottleneck')}  "
+                  f"roofline_frac={rf.get('roofline_fraction', 0):.4f}  "
+                  f"fits16g={art.get('fits_16gb')}", flush=True)
+
+    print(f"\ndone in {(time.time() - t_all) / 60:.1f} min; "
+          f"{len(failures)} failures: {failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

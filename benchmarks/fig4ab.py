@@ -1,0 +1,53 @@
+"""Fig 4 (a,b): cascaded binary self-join execution time vs H_bkt / G_bkt
+with phase breakdown.  Validates the paper's bottleneck markers: join 1 is
+DRAM/store-bound (H_bkt has no effect); join 2 is compute-bound at small
+G_bkt and stream-bound at large."""
+
+from __future__ import annotations
+
+from repro.perfmodel import PLASTICINE, binary_cascade_time
+from benchmarks.common import write_csv, claim
+
+N, D = 2e8, 7e5
+
+
+def main(results: dict | None = None):
+    results = results if results is not None else {}
+    print("fig4ab: cascaded binary join hyperparameter sweeps")
+
+    rows_a = []
+    j1 = []
+    for h in (4, 16, 64, 256, 1024, 4096, 16384, 65536):
+        b = binary_cascade_time(N, N, N, D, PLASTICINE, h_bkt=h)
+        rows_a.append([h, b.partition, b.join1, b.join2, b.total,
+                       b.bottleneck])
+        j1.append(b.join1)
+    write_csv("fig4a_binary_hbkt", ["h_bkt", "partition_s", "join1_s",
+                                    "join2_s", "total_s", "bottleneck"],
+              rows_a)
+    flat = (max(j1) - min(j1)) / max(j1) < 0.01
+    claim(results, "fig4a_join1_dram_bound_flat_in_hbkt", flat,
+          f"join1 varies {100 * (max(j1) - min(j1)) / max(j1):.2f}% "
+          f"across H_bkt (paper: DRAM-bound, no effect)")
+
+    rows_b = []
+    bns = {}
+    for g in (4, 16, 64, 256, 1024, 4096, 16384, 262144, 4194304):
+        b = binary_cascade_time(N, N, N, D, PLASTICINE, g_bkt=g)
+        comp = b.stages["j2_comp"]
+        stream = b.stages["j2_stream_I"]
+        bn = "comp" if comp > stream else "stream_RS"
+        bns[g] = bn
+        rows_b.append([g, b.partition, b.join1, b.join2, b.total, bn])
+    write_csv("fig4b_binary_gbkt", ["g_bkt", "partition_s", "join1_s",
+                                    "join2_s", "total_s", "j2_bottleneck"],
+              rows_b)
+    claim(results, "fig4b_join2_comp_to_stream_shift",
+          bns[4] == "comp" and bns[4194304] == "stream_RS",
+          f"j2 bottleneck small G={bns[4]} -> large G={bns[4194304]} "
+          "(paper: compute-bound -> stream_RS)")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Fig 4 (d): linear 3-way self-join hyperparameter selection — execution
+time vs H_bkt and g_bkt.  Paper behaviours validated: compute-bound at
+small g_bkt, shifting to stream_T; dramatic degradation at very large
+g_bkt (tiny S_ij buckets: DRAM response-time cliff + per-bucket sync);
+larger R partitions (small H_bkt) are better."""
+
+from __future__ import annotations
+
+from repro.perfmodel import PLASTICINE, linear3_time
+from benchmarks.common import write_csv, claim
+
+N, D = 2e8, 7e5
+
+
+def main(results: dict | None = None):
+    results = results if results is not None else {}
+    print("fig4d: linear 3-way hyperparameters")
+    rows = []
+    by_g = {}
+    for g in (16, 64, 256, 1024, 4096, 65536, 1048576, 16777216):
+        b = linear3_time(N, N, N, D, PLASTICINE, g_bkt=g)
+        comp = b.stages["comp"]
+        stream = b.stages["stream_T"] + b.stages["load_S"]
+        bn = "comp" if comp > stream else "stream_T"
+        by_g[g] = (b.total, bn)
+        rows.append([g, b.total, comp, b.stages["stream_T"],
+                     b.stages["load_S"], b.stages["sync"], bn])
+    write_csv("fig4d_linear3_gbkt",
+              ["g_bkt", "total_s", "comp_s", "stream_T_s", "load_S_s",
+               "sync_s", "bottleneck"], rows)
+
+    claim(results, "fig4d_comp_to_stream_shift",
+          by_g[16][1] == "comp" and by_g[16777216][1] == "stream_T",
+          f"bottleneck g=16: {by_g[16][1]} -> g=1.7e7: {by_g[16777216][1]}")
+    claim(results, "fig4d_large_gbkt_cliff",
+          by_g[16777216][0] > 3 * by_g[4096][0],
+          f"t(g=1.7e7)={by_g[16777216][0]:.1f}s >> "
+          f"t(g=4096)={by_g[4096][0]:.1f}s (tiny-bucket DRAM cliff)")
+
+    rows_h = []
+    hs = {}
+    for h in (200, 400, 800, 1600, 6400):   # min H = |R|/M = 200
+        b = linear3_time(N, N, N, D, PLASTICINE, h_bkt=h)
+        hs[h] = b.total
+        rows_h.append([h, b.total, b.bottleneck])
+    write_csv("fig4d_linear3_hbkt", ["h_bkt", "total_s", "bottleneck"],
+              rows_h)
+    claim(results, "fig4d_small_hbkt_better", hs[200] <= hs[6400],
+          f"t(H=200)={hs[200]:.1f}s <= t(H=6400)={hs[6400]:.1f}s "
+          "(paper: larger R partition + prefetch wins)")
+    return results
+
+
+if __name__ == "__main__":
+    main()

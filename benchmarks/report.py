@@ -1,0 +1,126 @@
+"""Render EXPERIMENTS.md tables from dry-run artifacts + bench CSVs.
+
+    PYTHONPATH=src python benchmarks/report.py   # prints markdown sections
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from collections import defaultdict
+
+DRYRUN = pathlib.Path("artifacts/dryrun")
+BENCH = pathlib.Path("artifacts/bench")
+
+
+def _load_all():
+    arts = defaultdict(dict)     # (arch, shape, mesh) -> {tag: art}
+    for p in sorted(DRYRUN.glob("*.json")):
+        parts = p.stem.split("__")
+        arch, shape, pod = parts[0], parts[1], parts[2]
+        tag = parts[3] if len(parts) > 3 else "baseline"
+        arts[(arch, shape, pod)][tag] = json.loads(p.read_text())
+    return arts
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def roofline_table(pod="pod1", tag="baseline"):
+    arts = _load_all()
+    lines = [
+        "| arch | shape | kind | t_comp | t_mem | t_coll | bottleneck |"
+        " useful | roofline_frac | peak GB | fits16G |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape, p), tags in sorted(arts.items()):
+        if p != pod or tag not in tags:
+            continue
+        a = tags[tag]
+        if not a.get("ok"):
+            lines.append(f"| {arch} | {shape} | FAILED | | | | | | | |")
+            continue
+        r = a["roofline"]
+        lines.append(
+            f"| {arch} | {shape} | {a['kind']} | {fmt_s(r['t_compute_s'])}"
+            f" | {fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])}"
+            f" | {r['bottleneck']} | {r['useful_flops_fraction']:.2f}"
+            f" | {r['roofline_fraction']:.4f}"
+            f" | {a['per_device_peak_bytes_est'] / 1e9:.1f}"
+            f" | {'Y' if a.get('fits_16gb') else 'N'} |")
+    return "\n".join(lines)
+
+
+def perf_table(cells):
+    """Per-cell iteration ladders."""
+    arts = _load_all()
+    out = []
+    for arch, shape in cells:
+        tags = arts.get((arch, shape, "pod1"), {})
+        out.append(f"\n**{arch} × {shape}**\n")
+        out.append("| iter | overrides | t_comp | t_mem | t_coll |"
+                   " bottleneck | roofline_frac | peak GB |")
+        out.append("|---|---|---|---|---|---|---|---|")
+        order = sorted(tags, key=lambda t: (t != "baseline", t))
+        for tag in order:
+            a = tags[tag]
+            if tag == "dbg" or not a.get("ok"):
+                continue
+            r = a["roofline"]
+            ov = " ".join(f"{k}={v}" for k, v in
+                          (a.get("overrides") or {}).items()) or "-"
+            out.append(
+                f"| {tag} | {ov} | {fmt_s(r['t_compute_s'])}"
+                f" | {fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])}"
+                f" | {r['bottleneck']} | {r['roofline_fraction']:.4f}"
+                f" | {a['per_device_peak_bytes_est'] / 1e9:.1f} |")
+    return "\n".join(out)
+
+
+def multipod_summary():
+    arts = _load_all()
+    n_ok = n_tot = 0
+    for (arch, shape, p), tags in arts.items():
+        if p != "pod2" or "baseline" not in tags:
+            continue
+        n_tot += 1
+        n_ok += bool(tags["baseline"].get("ok"))
+    return f"{n_ok}/{n_tot} multi-pod (2×16×16) cells lowered + compiled"
+
+
+def join_summary():
+    p = BENCH / "join_dryrun.json"
+    if not p.exists():
+        return "(join dry-run not yet generated)"
+    d = json.loads(p.read_text())
+    lines = ["| plan | wire bytes (total) | paper-predicted | ratio |",
+             "|---|---|---|---|"]
+    for name, r in d.items():
+        lines.append(f"| {name} | {r['wire_bytes_total']:.3e}"
+                     f" | {r['paper_predicted_bytes']:.3e}"
+                     f" | {r['measured_over_predicted']:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("## §Roofline (single-pod 16×16, baseline)\n")
+    print(roofline_table())
+    print("\n## multi-pod\n")
+    print(multipod_summary())
+    print("\n## §Perf ladders\n")
+    print(perf_table([
+        ("qwen3-moe-30b-a3b", "train_4k"),
+        ("moonshot-v1-16b-a3b", "train_4k"),
+        ("moonshot-v1-16b-a3b", "decode_32k"),
+        ("yi-34b", "train_4k"),
+        ("qwen2-1.5b", "train_4k"),
+    ]))
+    print("\n## join collective validation\n")
+    print(join_summary())

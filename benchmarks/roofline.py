@@ -1,0 +1,95 @@
+"""§Roofline table generator: reads artifacts/dryrun/*.json and emits the
+per-(arch × shape × mesh) roofline table as markdown (for EXPERIMENTS.md)
+and CSV.  Single-pod rows are the roofline table proper; multi-pod rows
+prove the "pod" axis shards (dry-run requirement)."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import write_csv, claim
+
+DRYRUN_DIR = pathlib.Path("artifacts/dryrun")
+
+
+def load(tag: str = ""):
+    arts = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        parts = p.stem.split("__")
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) > 3:
+            continue
+        arts.append(json.loads(p.read_text()))
+    return arts
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def markdown_table(arts, pod="pod1") -> str:
+    rows = []
+    hdr = ("| arch | shape | kind | t_comp | t_mem | t_coll | bottleneck "
+           "| useful_flops | roofline_frac | fits 16G |")
+    sep = "|" + "---|" * 10
+    for a in arts:
+        if not a.get("ok"):
+            rows.append(f"| {a['arch']} | {a['shape']} | - | FAILED: "
+                        f"{a.get('error', '?')[:60]} | | | | | | |")
+            continue
+        mesh_is_pod1 = a["mesh"] == "16x16"
+        if (pod == "pod1") != mesh_is_pod1:
+            continue
+        r = a["roofline"]
+        rows.append(
+            f"| {a['arch']} | {a['shape']} | {a['kind']} "
+            f"| {fmt_s(r['t_compute_s'])} | {fmt_s(r['t_memory_s'])} "
+            f"| {fmt_s(r['t_collective_s'])} | {r['bottleneck']} "
+            f"| {r['useful_flops_fraction']:.3f} "
+            f"| {r['roofline_fraction']:.4f} "
+            f"| {'Y' if a.get('fits_16gb') else 'N'} |")
+    return "\n".join([hdr, sep] + rows)
+
+
+def main(results: dict | None = None):
+    results = results if results is not None else {}
+    print("roofline: aggregate dry-run artifacts")
+    arts = load()
+    ok = [a for a in arts if a.get("ok")]
+    pod1 = [a for a in ok if a["mesh"] == "16x16"]
+    pod2 = [a for a in ok if a["mesh"] != "16x16"]
+    n_fail = len(arts) - len(ok)
+
+    rows = []
+    for a in ok:
+        r = a["roofline"]
+        rows.append([a["arch"], a["shape"], a["mesh"], a["kind"],
+                     r["t_compute_s"], r["t_memory_s"], r["t_collective_s"],
+                     r["bottleneck"], r["useful_flops_fraction"],
+                     r["roofline_fraction"], a.get("fits_16gb"),
+                     a.get("compile_s")])
+    write_csv("roofline",
+              ["arch", "shape", "mesh", "kind", "t_compute_s", "t_memory_s",
+               "t_collective_s", "bottleneck", "useful_flops_frac",
+               "roofline_frac", "fits_16gb", "compile_s"], rows)
+
+    claim(results, "dryrun_all_cells_compile", n_fail == 0,
+          f"{len(ok)}/{len(arts)} cells compiled "
+          f"({len(pod1)} single-pod + {len(pod2)} multi-pod)")
+    claim(results, "dryrun_multipod_present", len(pod2) >= 30,
+          f"{len(pod2)} multi-pod (2x16x16) cells lowered+compiled")
+    return results
+
+
+if __name__ == "__main__":
+    main()
+    print()
+    print(markdown_table(load(), "pod1"))

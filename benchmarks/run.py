@@ -1,0 +1,51 @@
+"""Benchmark harness entry point: one module per paper table/figure
+(Fig 4 a-i), plus measured real-execution joins and the roofline
+aggregation over dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-measured]
+
+Emits artifacts/bench/*.csv and a claim-validation summary; exits nonzero
+if any validated paper claim fails.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-measured", action="store_true",
+                    help="skip the real-execution joins (slow on CPU)")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig4ab, fig4c, fig4d, fig4ef, fig4ghi,
+                            measured_joins, roofline)
+
+    results: dict = {}
+    t0 = time.time()
+    fig4ab.main(results)
+    fig4c.main(results)
+    fig4d.main(results)
+    fig4ef.main(results)
+    fig4ghi.main(results)
+    if not args.skip_measured:
+        measured_joins.main(results)
+    roofline.main(results)
+
+    n_ok = sum(1 for v in results.values() if v["ok"])
+    print(f"\n=== benchmark claims: {n_ok}/{len(results)} validated "
+          f"({time.time() - t0:.1f}s) ===")
+    for name, v in results.items():
+        print(f"  [{'PASS' if v['ok'] else 'FAIL'}] {name}")
+    from benchmarks.common import OUTDIR
+    OUTDIR.mkdir(parents=True, exist_ok=True)
+    (OUTDIR / "claims.json").write_text(json.dumps(results, indent=2))
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+print("n devices:", len(jax.devices()))
+mesh = jax.make_mesh((2, 16, 16), ("pod", "data", "model"))
+print("mesh ok:", mesh.shape)
+
+# uneven sharding probe: 56 heads over 16 model shards
+mesh2 = jax.make_mesh((16, 16), ("data", "model"))
+x = jax.ShapeDtypeStruct((8, 56, 128, 64), jnp.bfloat16)  # b, heads, s, hd
+w = jax.ShapeDtypeStruct((64, 56, 128), jnp.bfloat16)
+def f(x, w):
+    return jnp.einsum("bhsd,dhe->bhse", x, w)
+try:
+    lowered = jax.jit(
+        f,
+        in_shardings=(NamedSharding(mesh2, P("data", "model", None, None)),
+                      NamedSharding(mesh2, P(None, "model", None))),
+        out_shardings=NamedSharding(mesh2, P("data", "model", None, None)),
+    ).lower(x, w)
+    c = lowered.compile()
+    print("UNEVEN SHARDING OK")
+    ma = c.memory_analysis()
+    print("memory_analysis:", type(ma), getattr(ma, "temp_size_in_bytes", None), getattr(ma, "argument_size_in_bytes", None))
+    ca = c.cost_analysis()
+    ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+    print("cost keys sample:", {k: v for k, v in list(ca.items())[:8]})
+    print("flops:", ca.get("flops"), "bytes:", ca.get("bytes accessed"))
+except Exception as e:
+    print("UNEVEN SHARDING FAILED:", type(e).__name__, str(e)[:500])

@@ -1,0 +1,42 @@
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+def kern(x_ref, o_ref):
+    # dynamic indexed store + fori_loop
+    n = x_ref.shape[0]
+    def body(i, acc):
+        v = x_ref[i]
+        return acc + v
+    s = jax.lax.fori_loop(0, n, body, jnp.zeros((), x_ref.dtype))
+    o_ref[0] = s
+    # dynamic store
+    idx = (x_ref[0].astype(jnp.int32)) % o_ref.shape[0]
+    o_ref[idx] = s * 2
+
+x = jnp.arange(16, dtype=jnp.float32)
+out = pl.pallas_call(
+    kern,
+    out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+    interpret=True,
+)(x)
+print("pallas interpret ok:", out)
+
+# grid + BlockSpec probe
+def mm_kern(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+M, K, N = 256, 128, 256
+a = jnp.ones((M, K), jnp.float32); b = jnp.ones((K, N), jnp.float32)
+out = pl.pallas_call(
+    mm_kern,
+    grid=(2, 2),
+    in_specs=[pl.BlockSpec((128, K), lambda i, j: (i, 0)),
+              pl.BlockSpec((K, 128), lambda i, j: (0, j))],
+    out_specs=pl.BlockSpec((128, 128), lambda i, j: (i, j)),
+    out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+    interpret=True,
+)(a, b)
+print("blockspec ok:", np.allclose(out, K))
+import jax.experimental.pallas.tpu as pltpu
+print("pltpu import ok:", hasattr(pltpu, "VMEM") or hasattr(pltpu, "TPUMemorySpace") or dir(pltpu)[:10])

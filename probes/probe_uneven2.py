@@ -1,0 +1,33 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+mesh = jax.make_mesh((16, 16), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+
+# heads=56 over model=16 (uneven), batch=16 over data=16 (even)
+x = jax.ShapeDtypeStruct((16, 56, 128, 64), jnp.bfloat16)
+w = jax.ShapeDtypeStruct((64, 56, 128), jnp.bfloat16)
+def f(x, w):
+    return jnp.einsum("bhsd,dhe->bhse", x, w)
+try:
+    c = jax.jit(f,
+        in_shardings=(NamedSharding(mesh, P("data", "model", None, None)),
+                      NamedSharding(mesh, P(None, "model", None))),
+        out_shardings=NamedSharding(mesh, P("data", "model", None, None)),
+    ).lower(x, w).compile()
+    print("HEAD-UNEVEN OK")
+except Exception as e:
+    print("HEAD-UNEVEN FAILED:", str(e)[:300])
+
+# internal-only uneven: inputs replicated on that dim, constraint inside
+def g(x, w):
+    y = jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P("data", "model", None, None)))
+    return jnp.einsum("bhsd,dhe->bhse", y, w)
+try:
+    c = jax.jit(g,
+        in_shardings=(NamedSharding(mesh, P("data", None, None, None)),
+                      NamedSharding(mesh, P(None, None, None))),
+    ).lower(x, w).compile()
+    print("INTERNAL-UNEVEN OK")
+except Exception as e:
+    print("INTERNAL-UNEVEN FAILED:", str(e)[:300])

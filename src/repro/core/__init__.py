@@ -1,0 +1,23 @@
+"""Core multiway hash-join engine (the paper's contribution).
+
+Public API:
+  Relation                 — fixed-capacity columnar relation
+  linear3_count / linear3_per_r_counts / linear3_fm_distinct
+  cyclic3_count            — triangle (cyclic) 3-way join
+  star3_count              — star-schema 3-way join
+  cascaded_binary_count    — the baseline plan
+  cost_model               — the paper's tuple-traffic analysis
+"""
+
+from repro.core.relation import Relation  # noqa: F401
+from repro.core.binary_join import (  # noqa: F401
+    cascaded_binary_count, cascaded_binary_per_r_counts, join_count,
+    join_materialize, probe_weight_sum, bucketed_join_count)
+from repro.core.linear3 import (  # noqa: F401
+    Linear3Plan, linear3_count, linear3_per_r_counts, linear3_fm_distinct)
+from repro.core.cyclic3 import Cyclic3Plan, cyclic3_count  # noqa: F401
+from repro.core.star3 import Star3Plan, star3_count  # noqa: F401
+from repro.core import cost_model, hashing, partition, sketches  # noqa: F401
+from repro.core.linear3 import default_plan as linear3_default_plan  # noqa: F401
+from repro.core.cyclic3 import default_plan as cyclic3_default_plan  # noqa: F401
+from repro.core.star3 import default_plan as star3_default_plan  # noqa: F401

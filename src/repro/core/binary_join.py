@@ -1,0 +1,172 @@
+"""Binary hash join and the cascaded-binary baseline (paper §6.3).
+
+Two execution paths:
+
+* **sorted path** (`join_count`, `join_materialize`, `probe_weight_sum`) —
+  exact joins via sort + searchsorted range probes.  O((n+m) log n), static
+  shapes, used as the in-framework oracle and for fast aggregates.
+
+* **bucketed path** (`bucketed_join_count`) — the accelerator-shaped
+  execution: hash-partition both sides into `[n_buckets, capacity]` grids
+  (PMU layout) and run the per-bucket compare kernel from
+  ``repro.kernels.ops``.  This is the structure Algorithm 1 builds on and is
+  exact as long as no bucket overflows (overflow is returned, never hidden).
+
+The cascade (first join materialized, second join aggregated) reproduces the
+paper's binary baseline, including the bounded intermediate buffer whose
+overflow models the DRAM/SSD spill cliff.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partition
+from repro.core.relation import Relation
+
+
+# --------------------------------------------------------------------------
+# sorted-path primitives
+# --------------------------------------------------------------------------
+
+def match_ranges(sorted_keys: jnp.ndarray, probe_keys: jnp.ndarray):
+    """For each probe key, the [lo, hi) range of equal keys in sorted_keys."""
+    lo = jnp.searchsorted(sorted_keys, probe_keys, side="left")
+    hi = jnp.searchsorted(sorted_keys, probe_keys, side="right")
+    return lo.astype(jnp.int32), hi.astype(jnp.int32)
+
+
+def join_count(build: Relation, build_key: str,
+               probe: Relation, probe_key: str) -> jnp.ndarray:
+    """Exact number of matching (build, probe) pairs."""
+    _, skeys = partition.sort_by_key(build, build_key)
+    lo, hi = match_ranges(skeys, probe.col(probe_key))
+    cnt = jnp.where(probe.valid, hi - lo, 0)
+    return jnp.sum(cnt.astype(jnp.int64) if cnt.dtype == jnp.int64
+                   else cnt.astype(jnp.int32)).astype(jnp.int32)
+
+
+def probe_weight_sum(build: Relation, build_key: str, build_weights: jnp.ndarray,
+                     probe_keys: jnp.ndarray, probe_valid: jnp.ndarray) -> jnp.ndarray:
+    """For each probe row: sum of weights over matching build rows.
+
+    The workhorse for per-key multiway aggregates: weights flow backwards
+    through each join stage (T -> S -> R) without materializing anything.
+    """
+    srel, skeys = partition.sort_by_key(build, build_key)
+    # weights must be permuted identically to the sort; recompute the order.
+    keys = jnp.where(build.valid, build.col(build_key), jnp.int32(0x7FFFFFFF))
+    order = jnp.argsort(keys, stable=True)
+    w = jnp.where(build.valid, build_weights, 0)[order]
+    cw = jnp.concatenate([jnp.zeros((1,), w.dtype), jnp.cumsum(w)])
+    lo, hi = match_ranges(skeys, probe_keys)
+    out = cw[hi] - cw[lo]
+    return jnp.where(probe_valid, out, 0)
+
+
+class JoinResult(NamedTuple):
+    rel: Relation            # materialized join, fixed capacity, masked
+    total: jnp.ndarray       # true (unclipped) number of result tuples
+    overflowed: jnp.ndarray  # () bool — result exceeded out_capacity
+
+
+def join_materialize(build: Relation, build_key: str,
+                     probe: Relation, probe_key: str,
+                     out_capacity: int,
+                     build_prefix: str = "", probe_prefix: str = "") -> JoinResult:
+    """Materialize the equi-join into a fixed-capacity Relation.
+
+    Used for the cascaded-binary intermediate I = R ⋈ S (paper §6.3): the
+    intermediate is written out (to DRAM in the paper) before the second
+    join; ``overflowed`` models the spill condition.
+    """
+    sbuild, skeys = partition.sort_by_key(build, build_key)
+    lo, hi = match_ranges(skeys, probe.col(probe_key))
+    cnt = jnp.where(probe.valid, hi - lo, 0).astype(jnp.int32)
+    off = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(cnt)])
+    total = off[-1]
+
+    slots = jnp.arange(out_capacity, dtype=jnp.int32)
+    # probe row owning output slot p: last i with off[i] <= p
+    owner = jnp.searchsorted(off, slots, side="right").astype(jnp.int32) - 1
+    owner = jnp.clip(owner, 0, probe.capacity - 1)
+    rank = slots - off[owner]
+    bidx = jnp.clip(lo[owner] + rank, 0, build.capacity - 1)
+    ok = slots < total
+
+    cols = {}
+    for name, col in sbuild.columns.items():
+        cols[build_prefix + name] = jnp.where(ok, col[bidx], jnp.int32(-0x7FFFFFFF))
+    for name, col in probe.columns.items():
+        key = probe_prefix + name
+        if key in cols:  # join column appears once
+            continue
+        cols[key] = jnp.where(ok, col[owner], jnp.int32(-0x7FFFFFFF))
+    return JoinResult(Relation(cols, ok), total, total > out_capacity)
+
+
+# --------------------------------------------------------------------------
+# cascaded binary baseline:  (R ⋈ S) materialized, then ⋈ T aggregated
+# --------------------------------------------------------------------------
+
+class CascadeResult(NamedTuple):
+    count: jnp.ndarray          # total 3-way join cardinality (aggregated)
+    intermediate_total: jnp.ndarray
+    intermediate_overflowed: jnp.ndarray
+
+
+def cascaded_binary_count(r: Relation, s: Relation, t: Relation,
+                          intermediate_capacity: int,
+                          rb: str = "b", sb: str = "b", sc: str = "c",
+                          tc: str = "c") -> CascadeResult:
+    """COUNT(R(AB) ⋈ S(BC) ⋈ T(CD)) as two cascaded binary joins with a
+    bounded, materialized intermediate (the paper's baseline plan)."""
+    inter = join_materialize(r, rb, s, sb, intermediate_capacity,
+                             build_prefix="r_", probe_prefix="s_")
+    # second join: aggregate only (final output never materialized, §6)
+    w = probe_weight_sum(t, tc, jnp.ones((t.capacity,), jnp.int32),
+                         inter.rel.col("s_" + sc), inter.rel.valid)
+    return CascadeResult(jnp.sum(w).astype(jnp.int32), inter.total,
+                         inter.overflowed)
+
+
+def cascaded_binary_per_r_counts(r: Relation, s: Relation, t: Relation,
+                                 rb: str = "b", sb: str = "b", sc: str = "c",
+                                 tc: str = "c") -> jnp.ndarray:
+    """Per-R-row 3-way join counts via weight backflow (no materialization).
+
+    w_s = |{t : t.c == s.c}| ;  count_r = Σ_{s : s.b == r.b} w_s.
+    Exact; used as the oracle for the per-key (Example 1) aggregate.
+    """
+    w_s = probe_weight_sum(t, tc, jnp.ones((t.capacity,), jnp.int32),
+                           s.col(sc), s.valid)
+    c_r = probe_weight_sum(s, sb, w_s, r.col(rb), r.valid)
+    return c_r
+
+
+# --------------------------------------------------------------------------
+# bucketed path (accelerator-shaped)
+# --------------------------------------------------------------------------
+
+def bucketed_join_count(build: Relation, build_key: str,
+                        probe: Relation, probe_key: str,
+                        n_buckets: int, build_cap: int, probe_cap: int,
+                        use_kernel: bool = False):
+    """Hash-partition both sides and count matches per bucket pair.
+
+    Returns (count, overflowed).  Matching keys hash identically, so
+    bucket-local exact compares lose nothing (completeness), and cross-bucket
+    pairs can never match (soundness) — exactness holds unless a bucket
+    overflows, which is reported.
+    """
+    from repro.kernels import ops as kops
+
+    b = partition.bucketize(build, build_key, n_buckets, build_cap, fn="h")
+    p = partition.bucketize(probe, probe_key, n_buckets, probe_cap, fn="h")
+    counts = kops.bucket_pair_count(
+        b.columns[build_key], b.valid, p.columns[probe_key], p.valid,
+        use_kernel=use_kernel)
+    return jnp.sum(counts), b.overflowed | p.overflowed

@@ -1,0 +1,133 @@
+"""Cyclic 3-way join  R(AB) ⋈ S(BC) ⋈ T(CA)  (triangles) — paper §5.
+
+Partitioning scheme (Fig 3):
+  * coarse ``H(A) × G(B)`` → an H×G grid of R partitions, each sized to
+    on-chip memory; T is partitioned by H(A) (read G times), S by G(B)
+    (read H times),
+  * fine ``h(A) × g(B)`` → the √U×√U PMU grid *within* a partition:
+    r(a,b) → PMU[h(a), g(b)];  s(b,c) broadcast down column g(b);
+    t(c,a) broadcast across row h(a),
+  * ``f(C)`` → streaming buckets so the S'/T' pieces per step are tiny.
+
+Cost: |R| + H·|S| + G·|T|, minimized at H* = √(|R||T| / (M|S|)) giving
+|R| + 2√(|R||S||T|/M)  (§5.2) — `cost_model.cyclic3_*` computes both.
+
+The per-PMU join is ``kernels.bucket_join.count3_cyclic``:
+count = Σ (M1ᵀ·M2) ⊙ M3 over the three equality matrices — two MXU matmuls.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partition
+from repro.core.relation import Relation
+from repro.kernels import ops as kops
+
+
+class Cyclic3Plan(NamedTuple):
+    h_parts: int   # coarse H(A) partitions
+    g_parts: int   # coarse G(B) partitions
+    uh: int        # PMU grid rows, h(A)
+    ug: int        # PMU grid cols, g(B)
+    f_parts: int   # streaming f(C) buckets
+    r_cap: int
+    s_cap: int
+    t_cap: int
+
+
+class Cyclic3Result(NamedTuple):
+    count: jnp.ndarray
+    overflowed: jnp.ndarray
+    tuples_read: jnp.ndarray
+
+
+def default_plan(n_r: int, n_s: int, n_t: int, *, m_budget: int,
+                 uh: int = 8, ug: int = 8, f_parts: int | None = None,
+                 slack: float = 2.5) -> Cyclic3Plan:
+    """H·G = ceil(|R|/M); split via the optimal H* = √(|R||T|/(M|S|)) (§5.2),
+    clamped to [1, HG]."""
+    import math
+
+    hg = max(1, math.ceil(n_r / m_budget))
+    h_star = math.sqrt(max(1.0, n_r * n_t / (m_budget * max(1, n_s))))
+    h_parts = int(min(max(1.0, h_star), hg))
+    g_parts = max(1, math.ceil(hg / h_parts))
+    if f_parts is None:
+        f_parts = max(1, math.ceil(max(n_s / g_parts, n_t / h_parts) / m_budget))
+    r_cap = partition.suggest_capacity(n_r, h_parts * g_parts * uh * ug, slack)
+    s_cap = partition.suggest_capacity(n_s, g_parts * f_parts * ug, slack)
+    t_cap = partition.suggest_capacity(n_t, h_parts * f_parts * uh, slack)
+    return Cyclic3Plan(h_parts, g_parts, uh, ug, f_parts, r_cap, s_cap, t_cap)
+
+
+def cyclic3_count(r: Relation, s: Relation, t: Relation,
+                  plan: Cyclic3Plan, *, use_kernel: bool = False,
+                  ra: str = "a", rb: str = "b", sb: str = "b", sc: str = "c",
+                  tc: str = "c", ta: str = "a") -> Cyclic3Result:
+    hp, gp, uh, ug, fp = (plan.h_parts, plan.g_parts, plan.uh, plan.ug,
+                          plan.f_parts)
+
+    # Fig 3 data reorganization.
+    r_ids, r_nb = partition.composite_ids(
+        r, [(ra, hp, "H"), (rb, gp, "G"), (ra, uh, "h"), (rb, ug, "g")])
+    rg = partition.bucketize_by_ids(r, r_ids, r_nb, plan.r_cap,
+                                    (hp, gp, uh, ug))
+    s_ids, s_nb = partition.composite_ids(
+        s, [(sb, gp, "G"), (sc, fp, "f"), (sb, ug, "g")])
+    sg = partition.bucketize_by_ids(s, s_ids, s_nb, plan.s_cap, (gp, fp, ug))
+    t_ids, t_nb = partition.composite_ids(
+        t, [(ta, hp, "H"), (tc, fp, "f"), (ta, uh, "h")])
+    tg = partition.bucketize_by_ids(t, t_ids, t_nb, plan.t_cap, (hp, fp, uh))
+
+    def hg_cell(r_a, r_b, r_v, s_b, s_c, s_v, t_c, t_a, t_v):
+        """Join one (H(A)=i, G(B)=j) partition triple on the uh×ug grid,
+        streaming over f(C) buckets."""
+
+        def f_step(acc, ys):
+            sb_f, sc_f, sv_f, tc_f, ta_f, tv_f = ys   # [ug, s_cap], [uh, t_cap]
+            # s broadcast down columns, t across rows (Fig 3 routing)
+            sbb = jnp.broadcast_to(sb_f[None], (uh,) + sb_f.shape)
+            scb = jnp.broadcast_to(sc_f[None], (uh,) + sc_f.shape)
+            svb = jnp.broadcast_to(sv_f[None], (uh,) + sv_f.shape)
+            tcb = jnp.broadcast_to(tc_f[:, None], (uh, ug, tc_f.shape[-1]))
+            tab = jnp.broadcast_to(ta_f[:, None], (uh, ug, ta_f.shape[-1]))
+            tvb = jnp.broadcast_to(tv_f[:, None], (uh, ug, tv_f.shape[-1]))
+
+            def flat(x):
+                return x.reshape((uh * ug,) + x.shape[2:])
+
+            c = kops.bucket_count3_cyclic(
+                flat(r_a), flat(r_b), flat(r_v),
+                flat(sbb), flat(scb), flat(svb),
+                flat(tcb), flat(tab), flat(tvb), use_kernel=use_kernel)
+            return acc + jnp.sum(c), None
+
+        acc, _ = jax.lax.scan(f_step, jnp.int32(0),
+                              (s_b, s_c, s_v, t_c, t_a, t_v))
+        return acc
+
+    def h_step(total, xs):
+        ria, rib, riv, tic, tia, tiv = xs   # row i: R[i], T[i]
+
+        def g_step(acc, ys):
+            rja, rjb, rjv, sjb, sjc, sjv = ys   # col j: R[i,j], S[j]
+            return acc + hg_cell(rja, rjb, rjv, sjb, sjc, sjv,
+                                 tic, tia, tiv), None
+
+        acc, _ = jax.lax.scan(
+            g_step, jnp.int32(0),
+            (ria, rib, riv, sg.columns[sb], sg.columns[sc], sg.valid))
+        return total + acc, None
+
+    total, _ = jax.lax.scan(
+        h_step, jnp.int32(0),
+        (rg.columns[ra], rg.columns[rb], rg.valid,
+         tg.columns[tc], tg.columns[ta], tg.valid))
+
+    overflow = rg.overflowed | sg.overflowed | tg.overflowed
+    tuples = r.n + hp * s.n + gp * t.n
+    return Cyclic3Result(total, overflow, tuples.astype(jnp.int32))

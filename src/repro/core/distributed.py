@@ -1,0 +1,320 @@
+"""Distributed multiway joins on the device mesh (shard_map).
+
+The paper's on-chip network routing maps 1:1 onto mesh collectives:
+
+  Plasticine                          TPU mesh ("row" × "col")
+  ---------------------------------   --------------------------------------
+  route r(a,b) → PMU[h(a), g(b)]      two-phase all_to_all (rows, then cols)
+  broadcast s(b,c) down column g(b)   all_to_all to column + all_gather rows
+  broadcast t(c,a) across row h(a)    all_to_all to row + all_gather cols
+  per-PMU bucket join                 per-device core join (Pallas kernels)
+  merge partial aggregates            psum (counts) / OR-reduce (FM sketches)
+
+Relations enter sharded in arrival order over all devices (the "DRAM-
+resident, evenly striped" state); the shuffle phases above are the
+partitioning the paper configures the accelerator to perform first (§4).
+
+Everything is static-shape: the shuffles use fixed-capacity per-destination
+send buffers, and overflow is psum-reduced and reported, never hidden.
+
+The same functions compile on the 2-pod production mesh: the "pod" axis is
+folded into "row" (joins scale out along rows; the extra hop is the paper's
+multi-chip case, and the collective-term roofline in EXPERIMENTS.md
+quantifies it).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import cyclic3, hashing, linear3, partition, star3
+from repro.core.relation import Relation
+from repro.kernels import ops as kops
+
+
+class DistJoinResult(NamedTuple):
+    count: jnp.ndarray       # () int32, global
+    overflowed: jnp.ndarray  # () bool, any shuffle/bucket overflow anywhere
+
+
+# --------------------------------------------------------------------------
+# shuffle primitives (inside shard_map)
+# --------------------------------------------------------------------------
+
+def _to_buckets(cols: dict, valid: jnp.ndarray, dest: jnp.ndarray,
+                n_dest: int, cap: int):
+    """Pack local rows into [n_dest, cap] send buffers (+ overflow flag)."""
+    rel = Relation(cols, valid)
+    ids = jnp.where(valid, dest, jnp.int32(n_dest))
+    b = partition.bucketize_by_ids(rel, ids, n_dest, cap, (n_dest,))
+    return b.columns, b.valid, b.overflowed
+
+
+def _all_to_all(cols: dict, valid: jnp.ndarray, axis: str):
+    """Exchange [n_dest, cap] buffers along a mesh axis → received rows,
+    flattened back to a local [n_src * cap] relation."""
+    def xc(x):
+        out = jax.lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
+                                 tiled=True)
+        return out.reshape((-1,))
+    return {k: xc(v) for k, v in cols.items()}, xc(valid)
+
+
+def _shuffle(cols: dict, valid: jnp.ndarray, key_col: str, axis: str,
+             n_dest: int, cap: int, fn: str):
+    """Route rows to the device at position hash(key) along `axis`."""
+    dest = hashing.hash_bucket(cols[key_col], n_dest, fn)
+    bcols, bvalid, ovf = _to_buckets(cols, valid, dest, n_dest, cap)
+    cols2, valid2 = _all_to_all(bcols, bvalid, axis)
+    return cols2, valid2, ovf
+
+
+def _replicate(cols: dict, valid: jnp.ndarray, axis: str):
+    """all_gather along `axis` (the paper's broadcast) → concatenated rows."""
+    def g(x):
+        return jax.lax.all_gather(x, axis, axis=0, tiled=True)
+    return {k: g(v) for k, v in cols.items()}, g(valid)
+
+
+def _or_all(x: jnp.ndarray, axes) -> jnp.ndarray:
+    """Global bitwise-OR via all_gather + local reduce (for FM bitmaps)."""
+    for ax in axes:
+        g = jax.lax.all_gather(x, ax, axis=0)
+        x = jax.lax.reduce(g, jnp.int32(0), jax.lax.bitwise_or, (0,))
+    return x
+
+
+def _psum_bool(x: jnp.ndarray, axes) -> jnp.ndarray:
+    return jax.lax.psum(x.astype(jnp.int32), axes) > 0
+
+
+# --------------------------------------------------------------------------
+# distributed cyclic 3-way join (the paper's grid algorithm, §5.1)
+# --------------------------------------------------------------------------
+
+def cyclic3_count_sharded(mesh: Mesh, row: str, col: str,
+                          *, shuffle_slack: float = 3.0,
+                          local_uh: int = 4, local_ug: int = 4,
+                          local_f: int = 2, local_slack: float = 3.0,
+                          use_kernel: bool = False):
+    """Build a jit-able distributed triangle-count:  f(R, S, T) -> result.
+
+    R(a,b), S(b,c), T(c,a) arrive sharded in arrival order over the whole
+    mesh (PartitionSpec((row, col)) on every column).  Device (i, j) ends up
+    owning R tuples with (H(a), G(b)) == (i, j), the full S_j column
+    partition and the full T_i row partition — exactly Fig 3.
+    """
+    nrow = mesh.shape[row]
+    ncol = mesh.shape[col]
+
+    def local(r_cols, r_valid, s_cols, s_valid, t_cols, t_valid):
+        # --- R → cell (H(a), G(b)): two-phase all_to_all ----------------
+        cap_r = partition.suggest_capacity(
+            r_valid.shape[0], nrow, shuffle_slack)
+        r1, rv1, ovf_r1 = _shuffle(r_cols, r_valid, "a", row, nrow, cap_r, "H")
+        cap_r2 = partition.suggest_capacity(rv1.shape[0], ncol, shuffle_slack)
+        r2, rv2, ovf_r2 = _shuffle(r1, rv1, "b", col, ncol, cap_r2, "G")
+
+        # --- S → column G(b), replicated down the column ----------------
+        cap_s = partition.suggest_capacity(
+            s_valid.shape[0], ncol, shuffle_slack)
+        s1, sv1, ovf_s = _shuffle(s_cols, s_valid, "b", col, ncol, cap_s, "G")
+        s2, sv2 = _replicate(s1, sv1, row)
+
+        # --- T → row H(a), replicated across the row --------------------
+        cap_t = partition.suggest_capacity(
+            t_valid.shape[0], nrow, shuffle_slack)
+        t1, tv1, ovf_t = _shuffle(t_cols, t_valid, "a", row, nrow, cap_t, "H")
+        t2, tv2 = _replicate(t1, tv1, col)
+
+        # --- local grid join (coarse level done; fine level = VMEM) -----
+        rl = Relation(r2, rv2)
+        sl = Relation(s2, sv2)
+        tl = Relation(t2, tv2)
+        plan = cyclic3.Cyclic3Plan(
+            h_parts=1, g_parts=1, uh=local_uh, ug=local_ug, f_parts=local_f,
+            r_cap=partition.suggest_capacity(
+                rl.capacity, local_uh * local_ug, local_slack),
+            s_cap=partition.suggest_capacity(
+                sl.capacity, local_f * local_ug, local_slack),
+            t_cap=partition.suggest_capacity(
+                tl.capacity, local_f * local_uh, local_slack))
+        res = cyclic3.cyclic3_count(rl, sl, tl, plan, use_kernel=use_kernel)
+
+        count = jax.lax.psum(res.count, (row, col))
+        ovf = _psum_bool(ovf_r1 | ovf_r2 | ovf_s | ovf_t | res.overflowed,
+                         (row, col))
+        return count, ovf
+
+    spec = P((row, col))
+
+    def fn(r: Relation, s: Relation, t: Relation) -> DistJoinResult:
+        sm = jax.shard_map(
+            lambda rc, rv, sc, sv, tc, tv: local(rc, rv, sc, sv, tc, tv),
+            mesh=mesh,
+            in_specs=(spec,) * 6,
+            out_specs=(P(), P()), check_vma=False)
+        count, ovf = sm(dict(r.columns), r.valid, dict(s.columns), s.valid,
+                        dict(t.columns), t.valid)
+        return DistJoinResult(count, ovf)
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# distributed linear 3-way join (§4, Algorithm 1 on the mesh)
+# --------------------------------------------------------------------------
+
+def linear3_count_sharded(mesh: Mesh, row: str, col: str,
+                          *, shuffle_slack: float = 3.0,
+                          local_u: int = 8, local_g: int = 4,
+                          local_slack: float = 3.0,
+                          use_kernel: bool = False):
+    """Distributed Algorithm 1: the whole mesh is the flat U-way PMU grid.
+
+    R and S shuffle to device h(B) (two-phase: row then col hash of B);
+    T is broadcast to every device (all_gather over both axes) — the
+    |R||T|/M term of the cost model becomes the T all-gather bytes, which
+    the roofline's collective term measures.  Call once per coarse H(B)
+    partition when R exceeds aggregate device memory.
+    """
+    nrow = mesh.shape[row]
+    ncol = mesh.shape[col]
+
+    def local(r_cols, r_valid, s_cols, s_valid, t_cols, t_valid):
+        cap_r = partition.suggest_capacity(r_valid.shape[0], nrow,
+                                           shuffle_slack)
+        r1, rv1, ovf_r1 = _shuffle(r_cols, r_valid, "b", row, nrow, cap_r, "H")
+        cap_r2 = partition.suggest_capacity(rv1.shape[0], ncol, shuffle_slack)
+        r2, rv2, ovf_r2 = _shuffle(r1, rv1, "b", col, ncol, cap_r2, "G")
+
+        cap_s = partition.suggest_capacity(s_valid.shape[0], nrow,
+                                           shuffle_slack)
+        s1, sv1, ovf_s1 = _shuffle(s_cols, s_valid, "b", row, nrow, cap_s, "H")
+        cap_s2 = partition.suggest_capacity(sv1.shape[0], ncol, shuffle_slack)
+        s2, sv2, ovf_s2 = _shuffle(s1, sv1, "b", col, ncol, cap_s2, "G")
+
+        # T broadcast to all devices (streamed bucket-by-bucket locally)
+        t1, tv1 = _replicate(t_cols, t_valid, row)
+        t2, tv2 = _replicate(t1, tv1, col)
+
+        rl = Relation(r2, rv2)
+        sl = Relation(s2, sv2)
+        tl = Relation(t2, tv2)
+        plan = linear3.Linear3Plan(
+            h_parts=1, u=local_u, g_parts=local_g,
+            r_cap=partition.suggest_capacity(rl.capacity, local_u,
+                                             local_slack),
+            s_cap=partition.suggest_capacity(sl.capacity,
+                                             local_g * local_u, local_slack),
+            t_cap=partition.suggest_capacity(tl.capacity, local_g,
+                                             local_slack))
+        res = linear3.linear3_count(rl, sl, tl, plan, use_kernel=use_kernel)
+        count = jax.lax.psum(res.count, (row, col))
+        ovf = _psum_bool(ovf_r1 | ovf_r2 | ovf_s1 | ovf_s2 | res.overflowed,
+                         (row, col))
+        return count, ovf
+
+    spec = P((row, col))
+
+    def fn(r: Relation, s: Relation, t: Relation) -> DistJoinResult:
+        sm = jax.shard_map(
+            local, mesh=mesh, in_specs=(spec,) * 6, out_specs=(P(), P()),
+            check_vma=False)
+        count, ovf = sm(dict(r.columns), r.valid, dict(s.columns), s.valid,
+                        dict(t.columns), t.valid)
+        return DistJoinResult(count, ovf)
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# distributed star 3-way join (§6.5)
+# --------------------------------------------------------------------------
+
+def star3_count_sharded(mesh: Mesh, row: str, col: str,
+                        *, shuffle_slack: float = 3.0,
+                        local_chunks: int = 1, local_slack: float = 3.0,
+                        use_kernel: bool = False):
+    """Distributed star join: R pinned by h(B) on rows (replicated along
+    cols), T pinned by g(C) on cols (replicated along rows); each fact tuple
+    s(b,c) is routed to exactly the one device (h(b), g(c)) — S crosses the
+    network once, R and T are the only replicated (small) relations."""
+    nrow = mesh.shape[row]
+    ncol = mesh.shape[col]
+
+    def local(r_cols, r_valid, s_cols, s_valid, t_cols, t_valid):
+        # dimensions: shuffle to their axis position, replicate along other
+        cap_r = partition.suggest_capacity(r_valid.shape[0], nrow,
+                                           shuffle_slack)
+        r1, rv1, ovf_r = _shuffle(r_cols, r_valid, "b", row, nrow, cap_r, "h")
+        r2, rv2 = _replicate(r1, rv1, col)
+
+        cap_t = partition.suggest_capacity(t_valid.shape[0], ncol,
+                                           shuffle_slack)
+        t1, tv1, ovf_t = _shuffle(t_cols, t_valid, "c", col, ncol, cap_t, "g")
+        t2, tv2 = _replicate(t1, tv1, row)
+
+        # fact: two-phase point routing (h(b) row, then g(c) col)
+        cap_s = partition.suggest_capacity(s_valid.shape[0], nrow,
+                                           shuffle_slack)
+        s1, sv1, ovf_s1 = _shuffle(s_cols, s_valid, "b", row, nrow, cap_s, "h")
+        cap_s2 = partition.suggest_capacity(sv1.shape[0], ncol, shuffle_slack)
+        s2, sv2, ovf_s2 = _shuffle(s1, sv1, "c", col, ncol, cap_s2, "g")
+
+        rl = Relation(r2, rv2)
+        sl = Relation(s2, sv2)
+        tl = Relation(t2, tv2)
+        # local PMU grid: 1×1 coarse, uh×ug fine handled by star3 itself
+        plan = star3.Star3Plan(
+            uh=4, ug=4, chunks=local_chunks,
+            r_cap=partition.suggest_capacity(rl.capacity, 4, local_slack),
+            s_cap=partition.suggest_capacity(sl.capacity,
+                                             local_chunks * 16, local_slack),
+            t_cap=partition.suggest_capacity(tl.capacity, 4, local_slack))
+        res = star3.star3_count(rl, sl, tl, plan, use_kernel=use_kernel)
+        count = jax.lax.psum(res.count, (row, col))
+        ovf = _psum_bool(ovf_r | ovf_t | ovf_s1 | ovf_s2 | res.overflowed,
+                         (row, col))
+        return count, ovf
+
+    spec = P((row, col))
+
+    def fn(r: Relation, s: Relation, t: Relation) -> DistJoinResult:
+        sm = jax.shard_map(
+            local, mesh=mesh, in_specs=(spec,) * 6, out_specs=(P(), P()),
+            check_vma=False)
+        count, ovf = sm(dict(r.columns), r.valid, dict(s.columns), s.valid,
+                        dict(t.columns), t.valid)
+        return DistJoinResult(count, ovf)
+
+    return fn
+
+
+# --------------------------------------------------------------------------
+# helpers for drivers/tests
+# --------------------------------------------------------------------------
+
+def shard_relation(rel: Relation, mesh: Mesh, row: str, col: str) -> Relation:
+    """Place a host relation onto the mesh, striped in arrival order."""
+    spec = P((row, col))
+    sharding = NamedSharding(mesh, spec)
+    cols = {k: jax.device_put(v, sharding) for k, v in rel.columns.items()}
+    valid = jax.device_put(rel.valid, sharding)
+    return Relation(cols, valid)
+
+
+def pad_to_multiple(rel: Relation, multiple: int) -> Relation:
+    """Pad capacity so it divides evenly over the mesh."""
+    cap = rel.capacity
+    rem = (-cap) % multiple
+    if rem == 0:
+        return rel
+    cols = {k: jnp.pad(v, (0, rem)) for k, v in rel.columns.items()}
+    valid = jnp.pad(rel.valid, (0, rem))
+    return Relation(cols, valid)

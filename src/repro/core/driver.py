@@ -1,0 +1,73 @@
+"""Overflow-handling drivers around the join algorithms.
+
+The paper assumes near-uniform keys (§1.2) and notes that skew must be
+handled by "leaving some components to handle overflow" or re-partitioning.
+Our bucketized layouts are fixed-capacity, so skew (including plain key
+multiplicity, |rel|/d copies per value) surfaces as an ``overflowed`` flag —
+never as silent wrong answers.
+
+These drivers implement the re-partition loop: on overflow, grow the
+per-bucket capacities geometrically (and optionally re-salt the hash
+functions) and re-run.  Capacities are static shapes, so each retry re-jits;
+retries are rare under the plan defaults and the cost is off the hot path.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+from repro.core import cyclic3, linear3, star3
+
+
+class OverflowError_(RuntimeError):
+    pass
+
+
+def _grown(plan: Any, growth: float, align: int = 8) -> Any:
+    caps = {f: getattr(plan, f) for f in ("r_cap", "s_cap", "t_cap")}
+    caps = {f: int(math.ceil(c * growth / align) * align)
+            for f, c in caps.items()}
+    return plan._replace(**caps)
+
+
+def linear3_count_auto(r, s, t, plan: linear3.Linear3Plan, *,
+                       max_retries: int = 4, growth: float = 2.0, **kw):
+    """linear3_count with geometric capacity growth on overflow."""
+    for _ in range(max_retries + 1):
+        res = linear3.linear3_count(r, s, t, plan, **kw)
+        if not bool(res.overflowed):
+            return res, plan
+        plan = _grown(plan, growth)
+    raise OverflowError_(f"linear3 overflow persisted; final plan {plan}")
+
+
+def linear3_per_r_counts_auto(r, s, t, plan: linear3.Linear3Plan, *,
+                              max_retries: int = 4, growth: float = 2.0, **kw):
+    for _ in range(max_retries + 1):
+        keys, counts, valid, ovf = linear3.linear3_per_r_counts(
+            r, s, t, plan, **kw)
+        if not bool(ovf):
+            return (keys, counts, valid), plan
+        plan = _grown(plan, growth)
+    raise OverflowError_(f"linear3 per-r overflow persisted; final plan {plan}")
+
+
+def cyclic3_count_auto(r, s, t, plan: cyclic3.Cyclic3Plan, *,
+                       max_retries: int = 4, growth: float = 2.0, **kw):
+    for _ in range(max_retries + 1):
+        res = cyclic3.cyclic3_count(r, s, t, plan, **kw)
+        if not bool(res.overflowed):
+            return res, plan
+        plan = _grown(plan, growth)
+    raise OverflowError_(f"cyclic3 overflow persisted; final plan {plan}")
+
+
+def star3_count_auto(r, s, t, plan: star3.Star3Plan, *,
+                     max_retries: int = 4, growth: float = 2.0, **kw):
+    for _ in range(max_retries + 1):
+        res = star3.star3_count(r, s, t, plan, **kw)
+        if not bool(res.overflowed):
+            return res, plan
+        plan = _grown(plan, growth)
+    raise OverflowError_(f"star3 overflow persisted; final plan {plan}")

@@ -1,0 +1,78 @@
+"""Hash families for radix partitioning.
+
+The paper partitions relations with "robust hash functions" [25] at two
+levels: a coarse level (H, G) that sizes partitions to on-chip memory, and a
+fine level (h, g, f) that routes tuples to PMUs / streaming buckets.  We use
+a Murmur3-style finalizer (full avalanche) seeded per hash function, followed
+by either a modulo or a top-bits multiply-shift reduction to the bucket count.
+
+All functions are vectorized jnp, int32-in / int32-out, and safe under jit,
+vmap, shard_map and inside Pallas kernels (pure arithmetic, no gathers).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Distinct odd constants per hash-function "name" so H, h, g, f, G are
+# independent, mirroring the paper's notation.
+_SEEDS = {
+    "H": 0x9E3779B1,
+    "G": 0x85EBCA77,
+    "h": 0xC2B2AE3D,
+    "g": 0x27D4EB2F,
+    "f": 0x165667B1,
+    "salt": 0xB5297A4D,
+}
+
+
+def _as_u32(x: jnp.ndarray) -> jnp.ndarray:
+    return x.astype(jnp.uint32)
+
+
+def mix32(x: jnp.ndarray, seed: int) -> jnp.ndarray:
+    """Murmur3 fmix32 with a seed xor — full-avalanche 32-bit mixer."""
+    h = _as_u32(x) ^ jnp.uint32(seed & 0xFFFFFFFF)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def hash_bucket(keys: jnp.ndarray, n_buckets: int, fn: str = "H",
+                salt: int = 0) -> jnp.ndarray:
+    """Map int keys -> bucket ids in [0, n_buckets) with hash family `fn`.
+
+    `salt` re-randomizes the family (used for skew-overflow re-partitioning).
+    Returns int32.
+    """
+    if fn not in _SEEDS:
+        raise ValueError(f"unknown hash fn {fn!r}; choose from {sorted(_SEEDS)}")
+    seed = (_SEEDS[fn] + 0x9E3779B9 * salt) & 0xFFFFFFFF
+    h = mix32(keys, seed)
+    # Modulo reduction on the avalanche-mixed hash.  (Lemire multiply-shift
+    # needs 64-bit arithmetic, which we avoid so the whole engine runs with
+    # jax_enable_x64 off — the default everywhere in this framework.)
+    return (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+def hash_trailing_zeros(keys: jnp.ndarray, reg: int) -> jnp.ndarray:
+    """rho(hash(key)) for Flajolet-Martin: index of lowest set bit + 1 of a
+    mixed hash, per register `reg` (independent family per register).
+
+    Returns int32 in [1, 33]; 33 means hash == 0 (probability 2^-32).
+    """
+    h = mix32(keys, (0x5851F42D + 0x9E3779B9 * reg) & 0xFFFFFFFF)
+    # lowest set bit: h & -h ; its position via population count of (x-1)
+    low = h & (jnp.uint32(0) - h)
+    rho = _popcount32(low - jnp.uint32(1)) + 1
+    return jnp.where(h == 0, jnp.int32(33), rho.astype(jnp.int32))
+
+
+def _popcount32(x: jnp.ndarray) -> jnp.ndarray:
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)

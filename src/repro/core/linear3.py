@@ -1,0 +1,187 @@
+"""Linear 3-way join  R(AB) ⋈ S(BC) ⋈ T(CD)  — paper §4, Algorithm 1.
+
+Partitioning scheme (Fig 2):
+  * coarse ``H(B)`` → `h_parts` partitions of R and S; one R partition is
+    sized to fit on-chip memory (here: one scan step's working set),
+  * fine ``h(B)`` → `u` PMU buckets within a partition (here: the Pallas
+    kernel's bucket grid),
+  * fine ``g(C)`` → `g_parts` streaming buckets of S and T; the T bucket with
+    the same g(C) is *broadcast to every PMU* (Algorithm 1 line 15).
+
+Execution = scan over H(B) partitions, inner scan over g(C) buckets; inside a
+step the bucket-triple join runs on the `u`-way grid (kernels/bucket_join).
+The scan carry holds only the running aggregate — S and T buckets are
+discarded after each step (Algorithm 1 lines 17, 20) and R's partition lives
+exactly one outer iteration (the paper's "R partition pinned on-chip").
+
+Cost (tuples touched): |R| + |S| + h_parts·|T|  ==  |R| + |S| + |R||T|/M.
+``tuples_read`` on the result reports the realized value for validation
+against ``cost_model``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partition
+from repro.core.relation import Relation
+from repro.kernels import ops as kops
+
+
+class Linear3Plan(NamedTuple):
+    h_parts: int   # coarse H(B) partitions of R and S
+    u: int         # PMU buckets per partition, h(B)
+    g_parts: int   # streaming g(C) buckets of S and T
+    r_cap: int     # per-(H,h) bucket capacity for R
+    s_cap: int     # per-(H,g,h) bucket capacity for S
+    t_cap: int     # per-g bucket capacity for T
+
+
+class Linear3Result(NamedTuple):
+    count: jnp.ndarray           # () int32 total join cardinality
+    overflowed: jnp.ndarray      # () bool — any bucket overflow (skew signal)
+    tuples_read: jnp.ndarray     # () int32 tuples streamed on-chip (cost metric)
+
+
+def default_plan(n_r: int, n_s: int, n_t: int, *, m_budget: int,
+                 u: int = 64, g_parts: int | None = None,
+                 slack: float = 2.5) -> Linear3Plan:
+    """Size partition counts from the paper's rules: h_parts = ceil(|R|/M) so
+    one R partition fits the memory budget; g_parts so a T bucket does."""
+    import math
+
+    h_parts = max(1, math.ceil(n_r / m_budget))
+    if g_parts is None:
+        g_parts = max(1, math.ceil(n_t / m_budget))
+    r_cap = partition.suggest_capacity(n_r, h_parts * u, slack)
+    s_cap = partition.suggest_capacity(n_s, h_parts * g_parts * u, slack)
+    t_cap = partition.suggest_capacity(n_t, g_parts, slack)
+    return Linear3Plan(h_parts, u, g_parts, r_cap, s_cap, t_cap)
+
+
+def _layouts(r, s, t, plan, rb, sb, sc, tc):
+    """The Fig 2 data reorganization: R → [hp,u,cap], S → [hp,gp,u,cap],
+    T → [gp,cap]."""
+    hp, u, gp = plan.h_parts, plan.u, plan.g_parts
+    r_ids, r_nb = partition.composite_ids(r, [(rb, hp, "H"), (rb, u, "h")])
+    rg = partition.bucketize_by_ids(r, r_ids, r_nb, plan.r_cap, (hp, u))
+    s_ids, s_nb = partition.composite_ids(
+        s, [(sb, hp, "H"), (sc, gp, "g"), (sb, u, "h")])
+    sg = partition.bucketize_by_ids(s, s_ids, s_nb, plan.s_cap, (hp, gp, u))
+    tg = partition.bucketize(t, tc, gp, plan.t_cap, fn="g")
+    return rg, sg, tg
+
+
+def linear3_count(r: Relation, s: Relation, t: Relation,
+                  plan: Linear3Plan, *, use_kernel: bool = False,
+                  rb: str = "b", sb: str = "b", sc: str = "c",
+                  tc: str = "c") -> Linear3Result:
+    """COUNT of the linear 3-way join per Algorithm 1."""
+    u = plan.u
+    rg, sg, tg = _layouts(r, s, t, plan, rb, sb, sc, tc)
+    tc_g, tv_g = tg.columns[tc], tg.valid     # [gp, t_cap]
+
+    def h_step(total, xs):
+        ri, rvi, sbi, sci, svi = xs           # one H(B) partition
+
+        def g_step(acc, ys):
+            sb_j, sc_j, sv_j, tc_j, tv_j = ys
+            # broadcast T_j to every PMU bucket (Algorithm 1 line 15)
+            tcb = jnp.broadcast_to(tc_j[None, :], (u,) + tc_j.shape)
+            tvb = jnp.broadcast_to(tv_j[None, :], (u,) + tv_j.shape)
+            c = kops.bucket_count3_linear(ri, rvi, sb_j, sc_j, sv_j, tcb, tvb,
+                                          use_kernel=use_kernel)
+            return acc + jnp.sum(c), None
+
+        acc, _ = jax.lax.scan(g_step, jnp.int32(0),
+                              (sbi, sci, svi, tc_g, tv_g))
+        return total + acc, None
+
+    total, _ = jax.lax.scan(
+        h_step, jnp.int32(0),
+        (rg.columns[rb], rg.valid, sg.columns[sb], sg.columns[sc], sg.valid))
+    overflow = rg.overflowed | sg.overflowed | tg.overflowed
+    tuples = r.n + s.n + plan.h_parts * t.n
+    return Linear3Result(total, overflow, tuples.astype(jnp.int32))
+
+
+def linear3_per_r_counts(r: Relation, s: Relation, t: Relation,
+                         plan: Linear3Plan, *, use_kernel: bool = False,
+                         rb: str = "b", sb: str = "b", sc: str = "c",
+                         tc: str = "c", key_col: str = "a"):
+    """Per-R-tuple counts (Example 1: friends-of-friends-of-friends per user).
+
+    Returns (keys [hp,u,r_cap], counts [hp,u,r_cap], valid, overflowed):
+    counts aligned with the bucketized R layout so callers can group-by the
+    carried key column.
+    """
+    u = plan.u
+    rg, sg, tg = _layouts(r, s, t, plan, rb, sb, sc, tc)
+    tc_g, tv_g = tg.columns[tc], tg.valid
+
+    def h_step(_, xs):
+        ri, rvi, sbi, sci, svi = xs
+
+        def g_step(acc, ys):
+            sb_j, sc_j, sv_j, tc_j, tv_j = ys
+            tcb = jnp.broadcast_to(tc_j[None, :], (u,) + tc_j.shape)
+            tvb = jnp.broadcast_to(tv_j[None, :], (u,) + tv_j.shape)
+            c = kops.bucket_per_r_counts(ri, rvi, sb_j, sc_j, sv_j, tcb, tvb,
+                                         use_kernel=use_kernel)
+            return acc + c, None
+
+        acc, _ = jax.lax.scan(g_step, jnp.zeros(ri.shape, jnp.int32),
+                              (sbi, sci, svi, tc_g, tv_g))
+        return None, acc
+
+    _, counts = jax.lax.scan(
+        h_step, None,
+        (rg.columns[rb], rg.valid, sg.columns[sb], sg.columns[sc], sg.valid))
+    overflow = rg.overflowed | sg.overflowed | tg.overflowed
+    key = key_col if key_col in rg.columns else rb
+    return rg.columns[key], counts, rg.valid, overflow
+
+
+def linear3_fm_distinct(r: Relation, s: Relation, t: Relation,
+                        plan: Linear3Plan, *, n_registers: int = 32,
+                        rb: str = "b", sb: str = "b", sc: str = "c",
+                        tc: str = "c", ra_col: str = "a", td_col: str = "d"):
+    """Flajolet–Martin estimate of |distinct (a, d)| over the join output,
+    folded on the fly (Example 1's aggregation) — never materializes joins.
+
+    Returns (registers [n_registers], overflowed).  Combine across shards
+    with elementwise max; estimate via sketches.fm_estimate.
+    """
+    u = plan.u
+    rg, sg, tg = _layouts(r, s, t, plan, rb, sb, sc, tc)
+    tc_g, tv_g = tg.columns[tc], tg.valid
+    td_g = tg.columns[td_col]
+
+    def h_step(regs, xs):
+        ri_a, ri_b, rvi, sbi, sci, svi = xs
+
+        def g_step(acc, ys):
+            sb_j, sc_j, sv_j, tc_j, tv_j, td_j = ys
+            tcb = jnp.broadcast_to(tc_j[None, :], (u,) + tc_j.shape)
+            tvb = jnp.broadcast_to(tv_j[None, :], (u,) + tv_j.shape)
+            tdb = jnp.broadcast_to(td_j[None, :], (u,) + td_j.shape)
+            regs_b = kops.fm_registers(ri_a, rvi, ri_b, sb_j, sc_j, sv_j,
+                                       tcb, tdb, tvb, n_registers=n_registers)
+            merged = jax.lax.reduce(regs_b, jnp.int32(0), jax.lax.bitwise_or,
+                                    (0,))
+            return acc | merged, None
+
+        acc, _ = jax.lax.scan(g_step, regs,
+                              (sbi, sci, svi, tc_g, tv_g, td_g))
+        return acc, None
+
+    regs0 = jnp.zeros((n_registers,), jnp.int32)
+    regs, _ = jax.lax.scan(
+        h_step, regs0,
+        (rg.columns[ra_col], rg.columns[rb], rg.valid,
+         sg.columns[sb], sg.columns[sc], sg.valid))
+    overflow = rg.overflowed | sg.overflowed | tg.overflowed
+    return regs, overflow

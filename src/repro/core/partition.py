@@ -1,0 +1,170 @@
+"""Radix hash partitioning (the paper's Fig 2 / Fig 3 data reorganization).
+
+Two static-shape-friendly layouts are provided:
+
+* ``partition_sorted`` — relation sorted by bucket id plus a CSR-style offsets
+  array.  This mirrors the paper's partition files ("S_ij partitions are
+  ordered first on H(B) and then on g(C)"): composite partitioning is just a
+  lexicographic sort on (outer, inner) bucket ids.
+
+* ``bucketize`` — fixed-capacity `[n_buckets, capacity]` grid with per-bucket
+  counts and an overflow indicator.  This is the on-chip layout: bucket i is
+  the contents of PMU i (or one VMEM tile in the Pallas kernels).  Overflow
+  (a bucket exceeding its capacity) is the skew signal; callers either size
+  capacity with slack (uniform assumption, §1.2) or re-partition with a salt.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core.relation import Relation, sentinel_fill
+
+
+class SortedPartition(NamedTuple):
+    rel: Relation            # rows sorted by bucket id (invalid rows last)
+    bucket_ids: jnp.ndarray  # (capacity,) int32, n_buckets for invalid rows
+    offsets: jnp.ndarray     # (n_buckets + 1,) int32 CSR offsets
+
+
+class Buckets(NamedTuple):
+    columns: dict            # name -> (n_buckets, capacity) int32, sentinel-padded
+    valid: jnp.ndarray       # (n_buckets, capacity) bool
+    counts: jnp.ndarray      # (n_buckets,) int32 true per-bucket count (pre-clip)
+    overflowed: jnp.ndarray  # () bool — any bucket exceeded capacity
+
+
+def bucket_ids_for(rel: Relation, key_col: str, n_buckets: int, fn: str,
+                   salt: int = 0) -> jnp.ndarray:
+    """Bucket id per row; invalid rows get id == n_buckets (sorts last)."""
+    ids = hashing.hash_bucket(rel.col(key_col), n_buckets, fn, salt)
+    return jnp.where(rel.valid, ids, jnp.int32(n_buckets))
+
+
+def partition_sorted(rel: Relation, key_col: str, n_buckets: int, fn: str = "H",
+                     salt: int = 0) -> SortedPartition:
+    ids = bucket_ids_for(rel, key_col, n_buckets, fn, salt)
+    order = jnp.argsort(ids, stable=True)
+    sorted_rel = rel.select(order, jnp.ones_like(order, dtype=bool))
+    sorted_ids = ids[order]
+    offsets = jnp.searchsorted(sorted_ids, jnp.arange(n_buckets + 1), side="left")
+    return SortedPartition(sorted_rel, sorted_ids, offsets.astype(jnp.int32))
+
+
+def partition_sorted2(rel: Relation, outer_col: str, inner_col: str,
+                      n_outer: int, n_inner: int, outer_fn: str = "H",
+                      inner_fn: str = "g") -> SortedPartition:
+    """Composite two-level partitioning: sort by (outer, inner) bucket pair.
+
+    Bucket id = outer * n_inner + inner, matching the paper's S layout
+    (ordered by H(B), then by g(C) within each H(B) partition).
+    """
+    outer = bucket_ids_for(rel, outer_col, n_outer, outer_fn)
+    inner = bucket_ids_for(rel, inner_col, n_inner, inner_fn)
+    flat = jnp.where(rel.valid, outer * n_inner + inner,
+                     jnp.int32(n_outer * n_inner))
+    order = jnp.argsort(flat, stable=True)
+    sorted_rel = rel.select(order, jnp.ones_like(order, dtype=bool))
+    sorted_ids = flat[order]
+    offsets = jnp.searchsorted(
+        sorted_ids, jnp.arange(n_outer * n_inner + 1), side="left")
+    return SortedPartition(sorted_rel, sorted_ids, offsets.astype(jnp.int32))
+
+
+def bucketize(rel: Relation, key_col: str, n_buckets: int, capacity: int,
+              fn: str = "h", salt: int = 0,
+              sentinel: int = -0x7FFFFFFF) -> Buckets:
+    """Scatter rows into a fixed [n_buckets, capacity] grid.
+
+    Rows beyond a bucket's capacity are dropped and flagged via
+    ``overflowed`` — the caller must re-partition (bigger capacity or new
+    salt).  Implementation: rank-within-bucket via a stable sort, then a
+    single scatter; O(n log n), no dynamic shapes.
+    """
+    ids = bucket_ids_for(rel, key_col, n_buckets, fn, salt)
+    order = jnp.argsort(ids, stable=True)
+    sorted_ids = ids[order]
+    # position of each sorted row within its bucket
+    starts = jnp.searchsorted(sorted_ids, jnp.arange(n_buckets + 1), side="left")
+    within = jnp.arange(sorted_ids.shape[0]) - starts[jnp.clip(sorted_ids, 0, n_buckets)]
+    counts = (starts[1:] - starts[:-1]).astype(jnp.int32)
+    overflowed = jnp.any(counts > capacity)
+
+    keep = (sorted_ids < n_buckets) & (within < capacity)
+    dest = jnp.where(keep, sorted_ids * capacity + within, n_buckets * capacity)
+
+    filled = sentinel_fill(rel, sentinel)
+    out_cols = {}
+    for name, col in filled.columns.items():
+        flat = jnp.full((n_buckets * capacity + 1,), sentinel, dtype=jnp.int32)
+        flat = flat.at[dest].set(col[order], mode="drop")
+        out_cols[name] = flat[:-1].reshape(n_buckets, capacity)
+    vflat = jnp.zeros((n_buckets * capacity + 1,), dtype=bool)
+    vflat = vflat.at[dest].set(rel.valid[order], mode="drop")
+    valid = vflat[:-1].reshape(n_buckets, capacity)
+    return Buckets(out_cols, valid, counts, overflowed)
+
+
+def bucketize_by_ids(rel: Relation, flat_ids: jnp.ndarray, n_buckets: int,
+                     capacity: int, out_shape: tuple,
+                     sentinel: int = -0x7FFFFFF0) -> Buckets:
+    """Scatter rows into `[*out_shape, capacity]` by precomputed flat bucket
+    ids (invalid rows must carry id == n_buckets).  Generic engine behind the
+    composite two/three-level layouts of Fig 2/3."""
+    order = jnp.argsort(flat_ids, stable=True)
+    sorted_ids = flat_ids[order]
+    starts = jnp.searchsorted(sorted_ids, jnp.arange(n_buckets + 1), side="left")
+    within = jnp.arange(sorted_ids.shape[0]) - starts[
+        jnp.clip(sorted_ids, 0, n_buckets)]
+    counts = (starts[1:] - starts[:-1]).astype(jnp.int32)
+    overflowed = jnp.any(counts > capacity)
+    keep = (sorted_ids < n_buckets) & (within < capacity)
+    dest = jnp.where(keep, sorted_ids * capacity + within, n_buckets * capacity)
+    cols = {}
+    for name, col in rel.columns.items():
+        flat = jnp.full((n_buckets * capacity + 1,), sentinel, dtype=jnp.int32)
+        flat = flat.at[dest].set(jnp.where(rel.valid, col,
+                                           jnp.int32(sentinel))[order],
+                                 mode="drop")
+        cols[name] = flat[:-1].reshape(*out_shape, capacity)
+    vflat = jnp.zeros((n_buckets * capacity + 1,), dtype=bool)
+    vflat = vflat.at[dest].set(rel.valid[order], mode="drop")
+    valid = vflat[:-1].reshape(*out_shape, capacity)
+    return Buckets(cols, valid, counts.reshape(out_shape), overflowed)
+
+
+def composite_ids(rel: Relation, specs: list[tuple[str, int, str]]) -> tuple[jnp.ndarray, int]:
+    """Flat composite bucket id from [(column, n_buckets, hash_fn), ...],
+    most-significant first.  Invalid rows get id == prod(n_buckets)."""
+    flat = jnp.zeros((rel.capacity,), jnp.int32)
+    total = 1
+    for col, nb, fn in specs:
+        ids = bucket_ids_for(rel, col, nb, fn)
+        flat = flat * nb + jnp.clip(ids, 0, nb - 1)
+        total *= nb
+    return jnp.where(rel.valid, flat, jnp.int32(total)), total
+
+
+def suggest_capacity(n_rows: int, n_buckets: int, slack: float = 2.0,
+                     align: int = 8) -> int:
+    """Uniform-hash bucket capacity with slack, aligned for TPU lanes."""
+    import math
+
+    mean = max(1, math.ceil(n_rows / n_buckets))
+    # Poisson tail headroom: mean + slack * sqrt(mean) at minimum.
+    cap = max(int(mean * slack), mean + int(slack * math.sqrt(mean)) + 1)
+    return int(math.ceil(cap / align) * align)
+
+
+def sort_by_key(rel: Relation, key_col: str,
+                big: int = 0x7FFFFFFF) -> tuple[Relation, jnp.ndarray]:
+    """Sort rows by the *actual* key (invalid rows last).  Returns the sorted
+    relation and the sorted key array (invalid = big sentinel) for
+    searchsorted probes — the exact-join building block."""
+    keys = jnp.where(rel.valid, rel.col(key_col), jnp.int32(big))
+    order = jnp.argsort(keys, stable=True)
+    return rel.select(order, jnp.ones_like(order, dtype=bool)), keys[order]

@@ -1,0 +1,51 @@
+"""Join planner: 3-way vs cascaded-binary decision (§6 logic).
+
+Two decision layers:
+  * traffic  — the paper's closed-form tuple-traffic comparison
+    (re-exported from cost_model: Examples 3/4 thresholds),
+  * time     — the Appendix-A cycle model on a concrete hardware profile
+    (captures the compute/DRAM/SSD terms traffic alone misses, e.g. the
+    v5e case where fast host DMA shrinks the 3-way win to 2.1×).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.cost_model import (  # noqa: F401  (traffic layer)
+    PlanChoice, choose_cyclic_strategy, choose_linear_strategy,
+    cascaded_binary_tuples, cyclic3_tuples, linear3_tuples)
+from repro.perfmodel import HW, PLASTICINE, binary_cascade_time, \
+    linear3_time, star3_time, star3_binary_time
+
+
+@dataclasses.dataclass(frozen=True)
+class TimedChoice:
+    strategy: str            # "3way" | "cascade"
+    t_3way_s: float
+    t_cascade_s: float
+    speedup: float           # cascade / 3way (>1 favors the 3-way)
+    bottleneck_3way: str
+    bottleneck_cascade: str
+
+
+def choose_linear_timed(n_r: float, n_s: float, n_t: float, d: float,
+                        hw: HW = PLASTICINE) -> TimedChoice:
+    """Self/linear 3-way vs cascade on a hardware profile (Fig 4 e/f)."""
+    t3 = linear3_time(n_r, n_s, n_t, d, hw)
+    tc = binary_cascade_time(n_r, n_s, n_t, d, hw)
+    return TimedChoice(
+        "3way" if t3.total < tc.total else "cascade",
+        t3.total, tc.total, tc.total / t3.total,
+        t3.bottleneck, tc.bottleneck)
+
+
+def choose_star_timed(n_r: float, n_s: float, n_t: float, d: float,
+                      hw: HW = PLASTICINE) -> TimedChoice:
+    """Star 3-way vs cascade (Fig 4 g/h/i)."""
+    t3 = star3_time(n_r, n_s, n_t, d, hw)
+    tc = star3_binary_time(n_r, n_s, n_t, d, hw)
+    return TimedChoice(
+        "3way" if t3.total < tc.total else "cascade",
+        t3.total, tc.total, tc.total / t3.total,
+        t3.bottleneck, tc.bottleneck)

@@ -1,0 +1,89 @@
+"""Fixed-capacity, validity-masked relations (struct-of-arrays).
+
+JAX requires static shapes, and the paper's algorithms never materialize the
+final join output (aggregates are folded on the fly, §6).  A Relation is a
+dict of equal-length int32 column arrays plus a boolean validity mask; the
+capacity is static, the live count `n` is dynamic.  All core algorithms
+consume and produce Relations (or aggregates).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Relation:
+    """Columnar relation with static capacity and a validity mask."""
+
+    columns: Mapping[str, jnp.ndarray]  # each (capacity,) int32
+    valid: jnp.ndarray                  # (capacity,) bool
+
+    # -- pytree protocol ----------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        return tuple(self.columns[n] for n in names) + (self.valid,), names
+
+    @classmethod
+    def tree_unflatten(cls, names, leaves):
+        *cols, valid = leaves
+        return cls(columns=dict(zip(names, cols)), valid=valid)
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.valid.shape[0]
+
+    @property
+    def n(self) -> jnp.ndarray:
+        """Dynamic number of live tuples."""
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    def col(self, name: str) -> jnp.ndarray:
+        return self.columns[name]
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_arrays(cls, capacity: int | None = None, **cols) -> "Relation":
+        """Build from equal-length arrays, optionally padding to `capacity`."""
+        arrs = {k: jnp.asarray(v, dtype=jnp.int32) for k, v in cols.items()}
+        lens = {a.shape[0] for a in arrs.values()}
+        if len(lens) != 1:
+            raise ValueError(f"ragged columns: {dict((k, v.shape) for k, v in arrs.items())}")
+        (n,) = lens
+        cap = capacity or n
+        if cap < n:
+            raise ValueError(f"capacity {cap} < rows {n}")
+        pad = cap - n
+        if pad:
+            arrs = {k: jnp.pad(a, (0, pad)) for k, a in arrs.items()}
+        valid = jnp.arange(cap) < n
+        return cls(columns=arrs, valid=valid)
+
+    def select(self, idx: jnp.ndarray, idx_valid: jnp.ndarray) -> "Relation":
+        """Gather rows by index (row validity AND idx_valid)."""
+        cols = {k: v[idx] for k, v in self.columns.items()}
+        return Relation(cols, self.valid[idx] & idx_valid)
+
+    def with_columns(self, **cols) -> "Relation":
+        new = dict(self.columns)
+        new.update({k: jnp.asarray(v, jnp.int32) for k, v in cols.items()})
+        return Relation(new, self.valid)
+
+    def mask_where(self, keep: jnp.ndarray) -> "Relation":
+        return Relation(dict(self.columns), self.valid & keep)
+
+
+def sentinel_fill(rel: Relation, sentinel: int = -0x7FFFFFFF) -> Relation:
+    """Overwrite invalid rows' columns with a sentinel that never equals a
+    live key, so masked compare loops need no extra predicate."""
+    cols = {
+        k: jnp.where(rel.valid, v, jnp.int32(sentinel))
+        for k, v in rel.columns.items()
+    }
+    return Relation(cols, rel.valid)

@@ -1,0 +1,58 @@
+"""Join-enriched data pipeline: the paper's hash-join engine as a
+first-class framework feature (DESIGN.md §3).
+
+Training examples carry a document id; a metadata relation maps doc_id →
+quality tier.  The enrichment stage hash-joins the example stream against
+the metadata (build once, probe per batch — the classic build/probe split)
+and emits per-example weights used by the loss/sampler.  This is the same
+``core.binary_join.probe_weight_sum`` primitive the 3-way joins use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import binary_join
+from repro.core.relation import Relation
+
+
+@dataclasses.dataclass
+class JoinEnrichedPipeline:
+    """Wraps a token-batch iterator, attaching join-derived example weights.
+
+    metadata: Relation with columns (doc, tier); examples with no metadata
+    row get weight `default_tier`.
+    """
+
+    metadata: Relation
+    tier_weights: tuple = (0.25, 0.5, 1.0, 2.0)
+    default_tier: int = 1
+
+    def weights_for(self, doc_ids: jnp.ndarray) -> jnp.ndarray:
+        """Probe the metadata build side for each example's doc id.
+
+        Weight = mean tier weight over matching metadata rows (documents can
+        have several annotations), default when unmatched.
+        """
+        doc_ids = jnp.asarray(doc_ids, jnp.int32)
+        valid = jnp.ones(doc_ids.shape, bool)
+        tiers = jnp.clip(self.metadata.col("tier"), 0,
+                         len(self.tier_weights) - 1)
+        tw = jnp.asarray(self.tier_weights, jnp.float32)
+        wsum = binary_join.probe_weight_sum(
+            self.metadata, "doc", tiers, doc_ids, valid)
+        cnt = binary_join.probe_weight_sum(
+            self.metadata, "doc", jnp.ones((self.metadata.capacity,),
+                                           jnp.int32), doc_ids, valid)
+        mean_tier = jnp.where(cnt > 0, wsum / jnp.maximum(cnt, 1),
+                              self.default_tier)
+        return jnp.take(tw, jnp.clip(mean_tier.astype(jnp.int32), 0,
+                                     len(self.tier_weights) - 1))
+
+    def enrich(self, batch: dict, doc_ids) -> dict:
+        out = dict(batch)
+        out["example_weight"] = self.weights_for(doc_ids)
+        return out

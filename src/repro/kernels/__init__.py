@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the join inner loops (+ jnp references).
+
+Layout: <name>.py holds the pl.pallas_call kernels with explicit BlockSpec
+VMEM tiling; ops.py is the jit'd public wrapper layer; ref.py the pure-jnp
+oracles every kernel is validated against (interpret=True on CPU).
+"""

@@ -1,0 +1,183 @@
+"""Pallas TPU kernels for the per-bucket join inner loops.
+
+This is the compute hot-spot the paper optimizes: once relations are radix
+partitioned, each PMU (here: one VMEM-resident bucket triple per grid step)
+joins tiny relations with all-pairs compares.  On Plasticine the compare is
+a 16-lane SIMD loop in a PCU; on TPU we map it to:
+
+* VPU 8×128 lanes for the equality matrices (branch-free compares on
+  sentinel-masked keys), and
+* the MXU for the contraction steps — per-key probe weights and the cyclic
+  existence matrix are literally matmuls over 0/1 matrices
+  (``count = Σ (M1ᵀ M2) ⊙ M3``).
+
+Layout contract (enforced by ``ops.py``):
+  - bucket grids ``[n_buckets, capacity]`` int32, capacity a multiple of 128
+    (MXU/VPU lane alignment),
+  - invalid slots pre-masked to per-side sentinels so cross-side equality of
+    invalid slots is impossible and kernels stay mask-free,
+  - per-bucket counts ≤ 2^24 so f32 accumulation is exact (bucket capacities
+    are VMEM-bounded, far below this).
+
+Grid: one program per bucket (the ``n_buckets`` grid dimension is
+embarrassingly parallel — Plasticine's U-way PMU parallelism).  BlockSpecs
+pin one bucket row of each operand in VMEM per step; Pallas double-buffers
+the HBM→VMEM streams across grid steps, which is exactly the paper's
+prefetch/double-buffering optimization (§6.2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _row(ref):
+    """Load a (1, C) block as a (C,) vector."""
+    return ref[0, :]
+
+
+# --------------------------------------------------------------------------
+# binary pair count
+# --------------------------------------------------------------------------
+
+def _pair_count_kernel(ka_ref, kb_ref, out_ref):
+    ka = _row(ka_ref)
+    kb = _row(kb_ref)
+    m = (ka[:, None] == kb[None, :]).astype(jnp.float32)
+    out_ref[0, 0] = jnp.sum(m)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pair_count(ka: jnp.ndarray, kb: jnp.ndarray, *, interpret: bool = True):
+    b, ca = ka.shape
+    _, cb = kb.shape
+    out = pl.pallas_call(
+        _pair_count_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, ca), lambda i: (i, 0)),
+            pl.BlockSpec((1, cb), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=interpret,
+    )(ka, kb)
+    return out[:, 0].astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# linear 3-way count (Algorithm 1 inner join)
+# --------------------------------------------------------------------------
+
+def _count3_linear_kernel(rb_ref, sb_ref, sc_ref, tc_ref, out_ref):
+    rb = _row(rb_ref)
+    sb = _row(sb_ref)
+    sc = _row(sc_ref)
+    tc = _row(tc_ref)
+    wr = jnp.sum((sb[:, None] == rb[None, :]).astype(jnp.float32), axis=1)
+    wt = jnp.sum((sc[:, None] == tc[None, :]).astype(jnp.float32), axis=1)
+    out_ref[0, 0] = jnp.sum(wr * wt)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def count3_linear(rb, sb, sc, tc, *, interpret: bool = True):
+    b, cr = rb.shape
+    _, cs = sb.shape
+    _, ct = tc.shape
+    out = pl.pallas_call(
+        _count3_linear_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, cr), lambda i: (i, 0)),
+            pl.BlockSpec((1, cs), lambda i: (i, 0)),
+            pl.BlockSpec((1, cs), lambda i: (i, 0)),
+            pl.BlockSpec((1, ct), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=interpret,
+    )(rb, sb, sc, tc)
+    return out[:, 0].astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# per-R-slot counts (Example 1 per-user aggregate) — MXU contraction
+# --------------------------------------------------------------------------
+
+def _per_r_kernel(rb_ref, sb_ref, sc_ref, tc_ref, out_ref):
+    rb = _row(rb_ref)
+    sb = _row(sb_ref)
+    sc = _row(sc_ref)
+    tc = _row(tc_ref)
+    wt = jnp.sum((sc[:, None] == tc[None, :]).astype(jnp.float32), axis=1)
+    m1 = (sb[:, None] == rb[None, :]).astype(jnp.float32)      # (Cs, Cr)
+    # c[r] = Σ_s w_s · m1[s, r]  ==  (1, Cs) @ (Cs, Cr)  — MXU
+    out_ref[0, :] = jnp.dot(wt[None, :], m1,
+                            preferred_element_type=jnp.float32)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def per_r_counts(rb, sb, sc, tc, *, interpret: bool = True):
+    b, cr = rb.shape
+    _, cs = sb.shape
+    _, ct = tc.shape
+    out = pl.pallas_call(
+        _per_r_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, cr), lambda i: (i, 0)),
+            pl.BlockSpec((1, cs), lambda i: (i, 0)),
+            pl.BlockSpec((1, cs), lambda i: (i, 0)),
+            pl.BlockSpec((1, ct), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, cr), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, cr), jnp.float32),
+        interpret=interpret,
+    )(rb, sb, sc, tc)
+    return out.astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# cyclic 3-way (triangle) count — two MXU matmuls per bucket triple
+# --------------------------------------------------------------------------
+
+def _count3_cyclic_kernel(ra_ref, rb_ref, sb_ref, sc_ref, tc_ref, ta_ref,
+                          out_ref):
+    ra = _row(ra_ref)
+    rb = _row(rb_ref)
+    sb = _row(sb_ref)
+    sc = _row(sc_ref)
+    tc = _row(tc_ref)
+    ta = _row(ta_ref)
+    m1 = (sb[:, None] == rb[None, :]).astype(jnp.float32)      # (Cs, Cr)
+    m2 = (sc[:, None] == tc[None, :]).astype(jnp.float32)      # (Cs, Ct)
+    p = jnp.dot(m1.T, m2, preferred_element_type=jnp.float32)  # (Cr, Ct)
+    m3 = (ra[:, None] == ta[None, :]).astype(jnp.float32)      # (Cr, Ct)
+    out_ref[0, 0] = jnp.sum(p * m3)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def count3_cyclic(ra, rb, sb, sc, tc, ta, *, interpret: bool = True):
+    b, cr = ra.shape
+    _, cs = sb.shape
+    _, ct = tc.shape
+    out = pl.pallas_call(
+        _count3_cyclic_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, cr), lambda i: (i, 0)),
+            pl.BlockSpec((1, cr), lambda i: (i, 0)),
+            pl.BlockSpec((1, cs), lambda i: (i, 0)),
+            pl.BlockSpec((1, cs), lambda i: (i, 0)),
+            pl.BlockSpec((1, ct), lambda i: (i, 0)),
+            pl.BlockSpec((1, ct), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=interpret,
+    )(ra, rb, sb, sc, tc, ta)
+    return out[:, 0].astype(jnp.int32)

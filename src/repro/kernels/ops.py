@@ -1,0 +1,135 @@
+"""Public jit'd wrappers around the Pallas kernels (with jnp fallback).
+
+Responsibilities kept out of the kernels so they stay branch-free:
+  * sentinel-mask invalid slots with per-side sentinels (so invalid slots can
+    never equal anything on the other side),
+  * pad capacities to 128-lane multiples (MXU/VPU alignment),
+  * dispatch kernel vs. pure-jnp reference (``use_kernel=False`` is the CPU
+    default — interpret-mode Pallas is for validation, not speed),
+  * cast/clip results back to caller shapes.
+
+Keys must be > SENT_BASE (= -2^31 + 16); the data generators and the
+relational layer guarantee int32 keys ≥ -2^30.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bucket_join, radix_hist, ref
+
+SENT_BASE = -0x7FFFFFF0
+_SENT = {"r": SENT_BASE + 1, "s": SENT_BASE + 2, "t": SENT_BASE + 3,
+         "a": SENT_BASE + 4, "b": SENT_BASE + 5}
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _mask(keys: jnp.ndarray, valid: jnp.ndarray, side: str) -> jnp.ndarray:
+    return jnp.where(valid, keys, jnp.int32(_SENT[side]))
+
+
+def _pad_lanes(x: jnp.ndarray, side: str, align: int = 128) -> jnp.ndarray:
+    c = x.shape[-1]
+    rem = (-c) % align
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, rem)]
+    return jnp.pad(x, pad, constant_values=_SENT[side])
+
+
+def bucket_pair_count(ka, va, kb, vb, *, use_kernel: bool = False):
+    ka = _mask(ka, va, "a")
+    kb = _mask(kb, vb, "b")
+    if use_kernel:
+        return bucket_join.pair_count(_pad_lanes(ka, "a"), _pad_lanes(kb, "b"),
+                                      interpret=_interpret())
+    return ref.bucket_pair_count(ka, kb)
+
+
+def bucket_count3_linear(rb, rv, sb, sc, sv, tc, tv, *,
+                         use_kernel: bool = False):
+    rb = _mask(rb, rv, "r")
+    sb = _mask(sb, sv, "s")
+    sc = _mask(sc, sv, "s")
+    tc = _mask(tc, tv, "t")
+    if use_kernel:
+        return bucket_join.count3_linear(
+            _pad_lanes(rb, "r"), _pad_lanes(sb, "s"), _pad_lanes(sc, "s"),
+            _pad_lanes(tc, "t"), interpret=_interpret())
+    return ref.bucket_count3_linear(rb, sb, sc, tc)
+
+
+def bucket_per_r_counts(rb, rv, sb, sc, sv, tc, tv, *,
+                        use_kernel: bool = False):
+    cr = rb.shape[-1]
+    rb = _mask(rb, rv, "r")
+    sb = _mask(sb, sv, "s")
+    sc = _mask(sc, sv, "s")
+    tc = _mask(tc, tv, "t")
+    if use_kernel:
+        out = bucket_join.per_r_counts(
+            _pad_lanes(rb, "r"), _pad_lanes(sb, "s"), _pad_lanes(sc, "s"),
+            _pad_lanes(tc, "t"), interpret=_interpret())
+        return out[:, :cr]
+    return ref.bucket_per_r_counts(rb, sb, sc, tc)
+
+
+def bucket_count3_cyclic(ra, rb, rv, sb, sc, sv, tc, ta, tv, *,
+                         use_kernel: bool = False):
+    ra = _mask(ra, rv, "r")
+    rb = _mask(rb, rv, "r")
+    sb = _mask(sb, sv, "s")
+    sc = _mask(sc, sv, "s")
+    tc = _mask(tc, tv, "t")
+    ta = _mask(ta, tv, "t")
+    if use_kernel:
+        return bucket_join.count3_cyclic(
+            _pad_lanes(ra, "r"), _pad_lanes(rb, "r"), _pad_lanes(sb, "s"),
+            _pad_lanes(sc, "s"), _pad_lanes(tc, "t"), _pad_lanes(ta, "t"),
+            interpret=_interpret())
+    return ref.bucket_count3_cyclic(ra, rb, sb, sc, tc, ta)
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "use_kernel"))
+def radix_histogram(keys, valid, *, n_buckets: int, use_kernel: bool = False):
+    """Histogram of hash_bucket(keys) over live rows."""
+    from repro.core import hashing
+
+    if use_kernel:
+        # pad the stream to the tile size with a sentinel whose bucket we
+        # compute and subtract afterwards.
+        tile = 1024
+        n = keys.shape[0]
+        padded = jnp.where(valid, keys, jnp.int32(_SENT["s"]))
+        rem = (-n) % tile
+        if rem:
+            padded = jnp.pad(padded, (0, rem), constant_values=_SENT["s"])
+        hist = radix_hist.radix_histogram(padded, n_buckets=n_buckets,
+                                          interpret=_interpret())
+        n_invalid = (padded.shape[0] - jnp.sum(valid)).astype(jnp.int32)
+        sent_bucket = hashing.hash_bucket(
+            jnp.full((1,), _SENT["s"], jnp.int32), n_buckets, "H")[0]
+        return hist.at[sent_bucket].add(-n_invalid)
+    ids = jnp.where(valid, hashing.hash_bucket(keys, n_buckets, "H"),
+                    jnp.int32(n_buckets))
+    return ref.radix_histogram(keys, ids, n_buckets)
+
+
+def fm_registers(ra, rv, rb, sb, sc, sv, tc, td, tv, *, n_registers: int = 32,
+                 use_kernel: bool = False):
+    """FM sketch registers over implicit joined (a, d) pairs (ref path only;
+    the matmul inside dominates and is already MXU-shaped under jit)."""
+    del use_kernel
+    ra = _mask(ra, rv, "r")
+    rb = _mask(rb, rv, "r")
+    sb = _mask(sb, sv, "s")
+    sc = _mask(sc, sv, "s")
+    tc = _mask(tc, tv, "t")
+    td = _mask(td, tv, "t")
+    return ref.fm_registers(ra, rb, sb, sc, tc, td, n_registers)

@@ -1,0 +1,68 @@
+"""Pallas kernel: hash + radix histogram via one-hot MXU matmul.
+
+Partitioning (the paper's Fig 2/3 data reorganization) first needs per-bucket
+counts.  The TPU-native trick: a histogram over `n_buckets` is
+``ones(1, T) @ onehot(bucket_id)(T, n_buckets)`` — a matmul the MXU eats,
+instead of a scatter the TPU hates.  The hash itself (Murmur-style mixer +
+Lemire reduction) is fused into the kernel so keys stream HBM→VMEM once.
+
+Grid: tiles of the key stream; the single output block is accumulated across
+grid steps (zero-initialized at step 0) — the canonical Pallas reduction
+pattern.  The same one-hot idiom is reused by the MoE router stats in
+``repro.models.moe`` (see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hist_kernel(keys_ref, out_ref, *, n_buckets: int, seed: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    k = keys_ref[0, :]
+    # Murmur fmix32 (inline so the kernel is self-contained)
+    h = k.astype(jnp.uint32) ^ jnp.uint32(seed)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    bucket = (h % jnp.uint32(n_buckets)).astype(jnp.int32)
+    # invalid slots are pre-masked to a negative sentinel -> bucket id mapped
+    # out of range by the caller contract (sentinel keys hash somewhere, so
+    # ops.py masks them to -1 directly on the bucket side instead):
+    onehot = (bucket[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (k.shape[0], n_buckets), 1)).astype(jnp.float32)
+    out_ref[0, :] += jnp.dot(jnp.ones((1, k.shape[0]), jnp.float32), onehot,
+                             preferred_element_type=jnp.float32)[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_buckets", "seed", "tile", "interpret"))
+def radix_histogram(keys: jnp.ndarray, *, n_buckets: int, seed: int = 0x9E3779B1,
+                    tile: int = 1024, interpret: bool = True) -> jnp.ndarray:
+    """Histogram of hash buckets over a 1-D key stream.
+
+    keys: (n,) int32, n a multiple of `tile` (caller pads with a sentinel and
+    subtracts the sentinel bucket afterwards — see ops.radix_histogram).
+    """
+    n = keys.shape[0]
+    assert n % tile == 0, (n, tile)
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, n_buckets=n_buckets, seed=seed),
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((1, tile), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, n_buckets), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n_buckets), jnp.float32),
+        interpret=interpret,
+    )(keys.reshape(1, n))
+    return out[0].astype(jnp.int32)

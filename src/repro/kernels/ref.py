@@ -1,0 +1,102 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function mirrors one kernel's contract exactly (same shapes, same
+sentinel conventions) and is used (a) as the correctness oracle in tests and
+(b) as the CPU fallback path in ``ops.py``.
+
+Shapes: buckets are laid out ``[n_buckets, capacity]`` (PMU grid layout from
+``repro.core.partition.bucketize``).  Invalid slots are assumed already
+masked to per-side sentinels by ``ops.py`` (so ``invalid != invalid`` across
+sides), which keeps the inner loops branch-free — the same trick the kernels
+use on TPU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bucket_pair_count(ka: jnp.ndarray, kb: jnp.ndarray) -> jnp.ndarray:
+    """Per-bucket count of equal (a, b) pairs.
+
+    ka: [B, Ca] int32 (invalid = SENT_A), kb: [B, Cb] int32 (invalid = SENT_B)
+    returns [B] int32.
+    """
+    m = ka[:, :, None] == kb[:, None, :]
+    return jnp.sum(m, axis=(1, 2)).astype(jnp.int32)
+
+
+def bucket_count3_linear(rb: jnp.ndarray, sb: jnp.ndarray, sc: jnp.ndarray,
+                         tc: jnp.ndarray) -> jnp.ndarray:
+    """Per-bucket linear 3-way count:  Σ_s (Σ_r [r.b=s.b]) · (Σ_t [s.c=t.c]).
+
+    rb: [B, Cr], sb/sc: [B, Cs], tc: [B, Ct]; returns [B] int32.
+    """
+    wr = jnp.sum(sb[:, :, None] == rb[:, None, :], axis=2)   # [B, Cs]
+    wt = jnp.sum(sc[:, :, None] == tc[:, None, :], axis=2)   # [B, Cs]
+    return jnp.sum(wr * wt, axis=1).astype(jnp.int32)
+
+
+def bucket_per_r_counts(rb: jnp.ndarray, sb: jnp.ndarray, sc: jnp.ndarray,
+                        tc: jnp.ndarray) -> jnp.ndarray:
+    """Per-R-slot 3-way counts:  c[r] = Σ_s [s.b=r.b] · w_s,
+    w_s = Σ_t [s.c=t.c].  The Example-1 per-user aggregate.
+
+    returns [B, Cr] int32 aligned with the bucketized R layout.
+    """
+    wt = jnp.sum(sc[:, :, None] == tc[:, None, :], axis=2)   # [B, Cs]
+    m1 = (sb[:, :, None] == rb[:, None, :])                  # [B, Cs, Cr]
+    return jnp.einsum("bsr,bs->br", m1.astype(jnp.int32), wt).astype(jnp.int32)
+
+
+def bucket_count3_cyclic(ra: jnp.ndarray, rb: jnp.ndarray,
+                         sb: jnp.ndarray, sc: jnp.ndarray,
+                         tc: jnp.ndarray, ta: jnp.ndarray) -> jnp.ndarray:
+    """Per-bucket triangle count: Σ_{r,s,t} [r.b=s.b][s.c=t.c][t.a=r.a].
+
+    ra/rb: [B, Cr], sb/sc: [B, Cs], tc/ta: [B, Ct]; returns [B] int32.
+    Computed as Σ_{r,t} (M1ᵀ M2)[r,t] · [t.a = r.a] — two MXU matmuls on TPU.
+    """
+    m1 = (sb[:, :, None] == rb[:, None, :]).astype(jnp.int32)  # [B, Cs, Cr]
+    m2 = (sc[:, :, None] == tc[:, None, :]).astype(jnp.int32)  # [B, Cs, Ct]
+    p = jnp.einsum("bsr,bst->brt", m1, m2)                     # [B, Cr, Ct]
+    m3 = (ra[:, :, None] == ta[:, None, :])                    # [B, Cr, Ct]
+    return jnp.sum(p * m3, axis=(1, 2)).astype(jnp.int32)
+
+
+def radix_histogram(keys: jnp.ndarray, bucket_ids: jnp.ndarray,
+                    n_buckets: int) -> jnp.ndarray:
+    """Histogram of precomputed bucket ids (invalid rows carry id==n_buckets).
+
+    returns [n_buckets] int32.
+    """
+    del keys  # signature parity with the kernel (which hashes in-kernel)
+    onehot = (bucket_ids[:, None] == jnp.arange(n_buckets)[None, :])
+    return jnp.sum(onehot, axis=0).astype(jnp.int32)
+
+
+def fm_registers(ra: jnp.ndarray, rb: jnp.ndarray, sb: jnp.ndarray,
+                 sc: jnp.ndarray, tc: jnp.ndarray, td: jnp.ndarray,
+                 n_registers: int) -> jnp.ndarray:
+    """FM/PCSA register-bitmap update over the *implicit* joined pairs.
+
+    For every (r, t) pair connected through some s (∃s: s.b=r.b ∧ s.c=t.c),
+    OR bit ρ(hash_k(a, d))-1 into bitmap k.  Returns [B, K] int32 bitmaps.
+    Never materializes the join — the existence matrix is a matmul.
+    """
+    import jax
+
+    from repro.core import hashing, sketches
+
+    m1 = (sb[:, :, None] == rb[:, None, :]).astype(jnp.int32)  # [B, Cs, Cr]
+    m2 = (sc[:, :, None] == tc[:, None, :]).astype(jnp.int32)  # [B, Cs, Ct]
+    exists = jnp.einsum("bsr,bst->brt", m1, m2) > 0            # [B, Cr, Ct]
+    # pair key: avalanche-mixed combination of (a, d)
+    pair = (hashing.mix32(ra[:, :, None], 0x1B873593) ^ hashing.mix32(
+        td[:, None, :], 0xE6546B64)).astype(jnp.int32)         # [B, Cr, Ct]
+    regs = []
+    for k in range(n_registers):
+        bits = jnp.where(exists, sketches.key_bits(pair, k), 0)
+        regs.append(jax.lax.reduce(bits, jnp.int32(0), jax.lax.bitwise_or,
+                                   (1, 2)))
+    return jnp.stack(regs, axis=-1)                            # [B, K]

@@ -1,0 +1,3 @@
+"""Launchers: production mesh, multi-pod dry-run, training and serving
+drivers.  ``dryrun.py`` must be run as a module entry point (it sets
+XLA_FLAGS before importing jax); nothing here imports it."""

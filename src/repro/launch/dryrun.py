@@ -1,0 +1,227 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+cell on the production mesh, prove it shards and fits, and extract the
+roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b \
+        --shape train_4k [--multi-pod] [--out artifacts/dryrun] \
+        [--set scan_group=8 seq_shard=1 ...]
+
+Writes one JSON artifact per cell:
+  memory_analysis    per-device argument/output/temp/peak bytes
+  cost_analysis      per-device FLOPs + bytes accessed
+  collectives        operand/wire bytes by kind and replica-group size
+  roofline           three terms (s), bottleneck, MODEL_FLOPS ratio
+
+The FIRST TWO LINES of this file force 512 host-platform devices — they
+must run before ANY other import (jax locks the device count on first
+init).  Never set that flag globally: smoke tests and benches see 1 device.
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+
+def _parse_overrides(items):
+    out = {}
+    for it in items or ():
+        k, v = it.split("=", 1)
+        if v.lower() in ("true", "false"):
+            out[k] = v.lower() == "true"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+        if k in ("seq_shard", "remat") and isinstance(out[k], int):
+            out[k] = bool(out[k])
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             overrides: dict | None = None, save_hlo: str | None = None):
+    import jax
+    from repro import configs  # noqa: F401
+    from repro.launch import hlo_analysis, hlo_stats, mesh as mesh_lib, specs
+    from repro.parallel import sharding as shd
+
+    t0 = time.monotonic()
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    overrides = dict(overrides or {})
+    # Pallas flash-attention substitution (§Perf): the model lowers with
+    # the numerically-identical jnp flash; the roofline then swaps the
+    # measured score-tensor traffic for the validated kernel's HBM
+    # contract (kernels/flash_attention.py — interpret-mode Pallas cannot
+    # appear in a CPU-compiled HLO module).
+    attn_substitute = bool(overrides.pop("attn_substitute", False))
+    # serve-time deployment mode: bf16 weights, no FSDP (replicated over
+    # "data") — kills the per-step f32 parameter all-gather at decode
+    serve_bf16 = bool(overrides.pop("serve_bf16", False))
+    rules = {}
+    if overrides.pop("seq_shard_rule", None) or overrides.get("seq_shard"):
+        rules["seq_res"] = ("model",)
+    n_chips = mesh.devices.size
+
+    cell, args = specs.input_specs(arch, shape, overrides=overrides or None)
+    serve_bf16 = serve_bf16 and cell.kind in ("prefill", "decode")
+    if serve_bf16:
+        rules["p_embed"] = ()      # no FSDP at serve: replicate over data
+    mesh_lib.activate(mesh, rules)
+    ctx = shd.current_context()
+    if serve_bf16:
+        import jax.numpy as jnp
+
+        def _bf16(s):
+            if hasattr(s, "dtype") and s.dtype == jnp.float32:
+                return jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+            return s
+        args = (jax.tree.map(_bf16, args[0]),) + args[1:]
+    step, in_sh, out_sh, donate = specs.step_and_shardings(cell, ctx, args)
+
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    mem = {
+        "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+        "output_bytes": getattr(ma, "output_size_in_bytes", None),
+        "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+        "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes",
+                                        None),
+        "alias_bytes": getattr(ma, "alias_size_in_bytes", None),
+    }
+    print("memory_analysis:", mem)
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_accessed = float(ca.get("bytes accessed", 0.0))
+    print("cost_analysis: flops=%.4g bytes=%.4g" % (flops, bytes_accessed))
+
+    hlo = compiled.as_text()
+    if save_hlo:
+        pathlib.Path(save_hlo).write_text(hlo)
+    # trip-count-aware static analysis (XLA cost_analysis counts while
+    # bodies once — useless for scanned-layer models; see hlo_stats)
+    stats = hlo_stats.analyze(hlo, world=n_chips)
+
+    mflops = hlo_analysis.model_flops_per_device(
+        cell.cfg, cell.kind, cell.global_batch, cell.seq_len, n_chips)
+
+    substitution = None
+    traffic = stats["traffic_bytes"]
+    if attn_substitute and cell.kind in ("train", "prefill") \
+            and cell.cfg.family != "ssm":
+        from repro.kernels import flash_attention as fa
+        qc, kc = 512, 1024          # the jnp flash chunk sizes
+        score = hlo_stats.score_traffic(hlo, n_chips, qc, kc)
+        n_attn_layers = cell.cfg.n_layers
+        if cell.cfg.is_hybrid:
+            n_attn_layers = cell.cfg.n_layers // cell.cfg.hybrid_every
+        contract = n_attn_layers * fa.hbm_bytes(
+            cell.cfg, cell.global_batch, cell.seq_len,
+            train=(cell.kind == "train")) / n_chips
+        traffic = stats["traffic_bytes"] - score + contract
+        substitution = {
+            "score_traffic_bytes": score,
+            "kernel_contract_bytes": contract,
+            "traffic_before": stats["traffic_bytes"],
+            "traffic_after": traffic,
+        }
+        print(f"pallas substitution: score={score:.3e} B  "
+              f"contract={contract:.3e} B")
+
+    roof = hlo_analysis.Roofline(
+        flops=stats["flops"], hbm_bytes=traffic,
+        wire_bytes=stats["collective_wire_bytes"], model_flops=mflops)
+
+    peak = 0.0
+    for k in ("temp_bytes", "argument_bytes", "output_bytes"):
+        peak += mem.get(k) or 0.0
+    # donated buffers alias input/output — don't double count
+    peak -= mem.get("alias_bytes") or 0.0
+
+    art = {
+        "arch": arch, "shape": shape, "kind": cell.kind,
+        "mesh": ("pod2x16x16" if multi_pod else "16x16"),
+        "n_chips": n_chips,
+        "overrides": {k: v for k, v in (overrides or {}).items()},
+        "ok": True,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem,
+        "per_device_peak_bytes_est": peak,
+        "fits_16gb": bool(peak < 16e9),
+        "xla_cost": {"flops": flops, "bytes_accessed": bytes_accessed,
+                     "note": "while bodies counted once by XLA"},
+        "hlo_stats": stats,
+        "attn_substitution": substitution,
+        "roofline": roof.to_json(),
+        "param_count": cell.cfg.param_count(),
+        "active_param_count": cell.cfg.active_param_count(),
+    }
+    return art
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k",
+                    choices=list(__import__("repro.configs",
+                                            fromlist=["SHAPES"]).SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", default=None,
+                    help="also dump the optimized HLO text to this path")
+    ap.add_argument("--set", nargs="*", dest="overrides", default=None,
+                    metavar="K=V", help="ModelConfig overrides "
+                    "(e.g. scan_group=8 seq_shard=1)")
+    ap.add_argument("--tag", default="", help="artifact filename suffix "
+                    "(perf-iteration id)")
+    args = ap.parse_args()
+
+    overrides = _parse_overrides(args.overrides)
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    name = f"{args.arch}__{args.shape}__" \
+           f"{'pod2' if args.multi_pod else 'pod1'}"
+    if args.tag:
+        name += f"__{args.tag}"
+
+    try:
+        art = run_cell(args.arch, args.shape, args.multi_pod,
+                       overrides=overrides, save_hlo=args.save_hlo)
+    except Exception as e:  # record failures as artifacts too
+        art = {"arch": args.arch, "shape": args.shape,
+               "mesh": "pod2x16x16" if args.multi_pod else "16x16",
+               "ok": False, "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()}
+        (outdir / f"{name}.json").write_text(json.dumps(art, indent=2))
+        print(json.dumps({k: art[k] for k in ("arch", "shape", "ok",
+                                              "error")}, indent=2))
+        raise SystemExit(1)
+
+    (outdir / f"{name}.json").write_text(json.dumps(art, indent=2))
+    summary = {k: art[k] for k in ("arch", "shape", "mesh", "kind", "ok",
+                                   "compile_s", "fits_16gb")}
+    summary["bottleneck"] = art["roofline"]["bottleneck"]
+    summary["roofline_fraction"] = round(
+        art["roofline"]["roofline_fraction"], 4)
+    print(json.dumps(summary, indent=2))
+
+
+if __name__ == "__main__":
+    main()

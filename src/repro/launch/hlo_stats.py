@@ -1,0 +1,534 @@
+"""Static analyzer for optimized (post-SPMD) HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis counts a
+``while`` body ONCE — a scanned-layer transformer reports ~1/L of its real
+flops/bytes, and collectives inside the layer loop (e.g. MoE all-to-alls)
+vanish from the totals.  This module re-derives per-device, per-step:
+
+  * flops           — every dot (2·|out|·k, batch-aware) and convolution,
+                      recursively through fusions/calls, × while trip
+                      counts (from ``backend_config known_trip_count``).
+  * traffic bytes   — an HBM model: every non-view top-level op reads its
+                      operands and writes its result once; fusion internals
+                      are free (that is what fusion means); while-loop
+                      bodies multiply by trip count.
+  * collective wire bytes — ring-model per-device traffic by kind and by
+                      replica-group size (16 = one mesh axis, 512 = world),
+                      × trip counts.
+
+The analyzer is intentionally text-level (no jaxlib private APIs) so it
+also runs on HLO dumps from other toolchains.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*"
+    r"(\([^()]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([\w\-]+)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_WINDOW_SIZE_RE = re.compile(r"window=\{[^}]*size=([0-9x]+)")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# view/control ops: no HBM traffic of their own
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "iota", "rng-bit-generator",
+}
+
+
+def _dtype_bytes(dt: str) -> int:
+    return _DTYPE_BYTES.get(dt, 4)
+
+
+def _shape_dims(shape_str: str) -> tuple[list[int], int]:
+    """First array shape in the string -> (dims, elem_bytes)."""
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return [], 0
+    dt, dims = m.group(1), m.group(2)
+    d = [int(x) for x in dims.split(",") if x]
+    return d, _dtype_bytes(dt)
+
+
+def _all_shapes_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        for x in dims.split(","):
+            if x:
+                n *= int(x)
+        total += n * _dtype_bytes(dt)
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result: str
+    opcode: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    is_entry: bool = False
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            if line and not line[0].isspace() and line.rstrip().endswith("{"):
+                m = _COMP_HDR.match(line)
+                if m:
+                    cur = Computation(m.group(2), [],
+                                      is_entry=bool(m.group(1)))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur.ops.append(Op(m.group(1), m.group(2), m.group(3), line))
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    traffic: float = 0.0
+    coll_wire: float = 0.0
+    coll_by_kind: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    coll_by_group: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    n_coll: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.traffic += other.traffic * mult
+        self.coll_wire += other.coll_wire * mult
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] += v * mult
+        for k, v in other.coll_by_group.items():
+            self.coll_by_group[k] += v * mult
+        self.n_coll += int(other.n_coll * mult)
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return world
+
+
+def _collective_wire(kind: str, result_bytes: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n * result_bytes
+    if kind == "all-gather":
+        return (n - 1) / n * result_bytes
+    if kind == "reduce-scatter":
+        return float((n - 1) * result_bytes)      # operand = result × n
+    if kind == "all-to-all":
+        return (n - 1) / n * result_bytes
+    return float(result_bytes)                    # collective-permute
+
+
+class HloAnalyzer:
+    def __init__(self, text: str, world: int, trace: bool = False):
+        self.comps = parse_module(text)
+        self.world = world
+        self._memo: dict[str, Cost] = {}
+        self.trace = trace
+        self.contrib: list = []        # (traffic, mult, comp, op) if trace
+        self._mult = 1.0
+        # symbol tables: comp name -> {op name -> result shape str}
+        self._sym = {c.name: {op.name: op.result for op in c.ops}
+                     for c in self.comps.values()}
+
+    def entry_cost(self) -> Cost:
+        entry = next((c for c in self.comps.values() if c.is_entry), None)
+        if entry is None:   # fall back: biggest computation
+            entry = max(self.comps.values(), key=lambda c: len(c.ops))
+        return self._cost(entry.name, traffic_on=True)
+
+    # -- per-computation cost ------------------------------------------
+    def _cost(self, name: str, traffic_on: bool) -> Cost:
+        key = f"{name}|{traffic_on}"
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        cost = Cost()
+        if comp is None:
+            self._memo[key] = cost
+            return cost
+        self._memo[key] = cost      # break cycles defensively
+        sym = self._sym[name]
+        for op in comp.ops:
+            oc = op.opcode
+            base_kind = oc[:-6] if oc.endswith("-start") else oc
+            if oc == "while":
+                m = _TRIP_RE.search(op.line)
+                trip = int(m.group(1)) if m else 1
+                b = _BODY_RE.search(op.line)
+                c = _COND_RE.search(op.line)
+                if b:
+                    cost.add(self._cost(b.group(1), traffic_on), trip)
+                if c:
+                    cost.add(self._cost(c.group(1), traffic_on), trip)
+                continue
+            if oc == "conditional":
+                m = _BRANCHES_RE.search(op.line)
+                if m:
+                    subs = [self._cost(s.strip().lstrip("%"), traffic_on)
+                            for s in m.group(1).split(",")]
+                    if subs:
+                        big = max(subs, key=lambda s: (s.flops, s.traffic))
+                        cost.add(big)
+                continue
+            if oc in ("fusion", "call", "async-start"):
+                m = _CALLS_RE.search(op.line)
+                if m:
+                    # flops + collectives inside; NO internal traffic
+                    cost.add(self._cost(m.group(1), traffic_on=False))
+                if traffic_on and oc != "async-start":
+                    cost.traffic += self._fusion_traffic(
+                        op, sym, m.group(1) if m else None)
+                continue
+            if base_kind in _COLLECTIVES:
+                rb = _all_shapes_bytes(op.result)
+                n = _group_size(op.line, self.world)
+                w = _collective_wire(base_kind, rb, n)
+                cost.coll_wire += w
+                cost.coll_by_kind[base_kind] += w
+                cost.coll_by_group[n] += w
+                cost.n_coll += 1
+                if traffic_on:
+                    cost.traffic += self._op_traffic(op, sym)
+                continue
+            if oc == "dot":
+                cost.flops += self._dot_flops(op, sym)
+            elif oc == "convolution":
+                cost.flops += self._conv_flops(op, sym)
+            if traffic_on and oc not in _NO_TRAFFIC:
+                cost.traffic += self._op_traffic(op, sym)
+        self._memo[key] = cost
+        return cost
+
+    # -- op-level helpers ----------------------------------------------
+    def _operand_names(self, op: Op) -> list[str]:
+        call = op.line.split(op.opcode + "(", 1)[1]
+        depth = 1
+        args = []
+        for i, ch in enumerate(call):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args = _OPERANDS_RE.findall(call[:i])
+                    break
+        return args
+
+    def _op_traffic(self, op: Op, sym: dict) -> float:
+        """HBM traffic of one top-level op: read operands + write result,
+        with slicing ops charged only for the data they touch."""
+        res = _all_shapes_bytes(op.result)
+        oc = op.opcode
+        if oc in ("dynamic-slice", "slice"):
+            return 2.0 * res                       # read slice + write
+        if oc == "gather":
+            idx = sym.get((self._operand_names(op) + [None, None])[1], "")
+            return 2.0 * res + _all_shapes_bytes(idx)
+        if oc == "dynamic-update-slice":
+            upd = sym.get((self._operand_names(op) + [None, None])[1], "")
+            return 2.0 * _all_shapes_bytes(upd)    # in-place slice write
+        if oc == "scatter":
+            names = self._operand_names(op)
+            upd = sym.get(names[2], "") if len(names) > 2 else ""
+            idx = sym.get(names[1], "") if len(names) > 1 else ""
+            return (2.0 * _all_shapes_bytes(upd)
+                    + _all_shapes_bytes(idx))
+        t = float(res)
+        for nm in self._operand_names(op):
+            shp = sym.get(nm)
+            if shp:
+                t += _all_shapes_bytes(shp)
+        return t
+
+    def _fusion_traffic(self, op: Op, sym: dict,
+                        callee: str | None) -> float:
+        """Fusion site traffic: result + effective operand bytes.  An
+        operand whose in-fusion consumers are all slicing ops is charged at
+        the sliced size; a DUS-rooted fusion writes only its update."""
+        comp = self.comps.get(callee) if callee else None
+        names = self._operand_names(op)
+        if comp is None:
+            return self._op_traffic(op, sym)
+        fsym = self._sym[comp.name]
+        # map parameter index -> in-fusion param op name
+        param_of: dict[int, str] = {}
+        for fop in comp.ops:
+            if fop.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", fop.line)
+                if m:
+                    param_of[int(m.group(1))] = fop.name
+        # consumers of each in-fusion op
+        consumers: dict[str, list[Op]] = defaultdict(list)
+        for fop in comp.ops:
+            for nm in self._operand_names(fop):
+                consumers[nm].append(fop)
+
+        total = 0.0
+        # in-place pattern: an internal DUS whose buffer operand resolves
+        # (through convert/bitcast/copy/reshape chains — XLA:CPU wraps
+        # bf16 buffers in f32 converts that a TPU lowering does not emit)
+        # to a fusion parameter of ~the fusion result's element count: the
+        # update is written through; the big buffer is never re-read.
+        view_like = {"convert", "bitcast", "copy", "reshape", "transpose"}
+        op_by_name = {f.name: f for f in comp.ops}
+
+        def resolve(nm: str, depth: int = 0) -> str:
+            f = op_by_name.get(nm)
+            if f is None or depth > 8:
+                return nm
+            if f.opcode == "parameter":
+                return nm
+            if f.opcode in view_like:
+                ops_ = self._operand_names(f)
+                if ops_:
+                    return resolve(ops_[0], depth + 1)
+            return nm
+
+        dus_ops = [f for f in comp.ops
+                   if f.opcode == "dynamic-update-slice"]
+        inplace_param = None
+        dus_update_bytes = 0.0
+        res_bytes = _all_shapes_bytes(op.result)
+
+        def _numel(shape_str):
+            d, eb = _shape_dims(shape_str)
+            n = 1
+            for x in d:
+                n *= x
+            return n, eb
+
+        res_numel, _ = _numel(op.result)
+        for dus in dus_ops:
+            dnames = self._operand_names(dus)
+            if not dnames:
+                continue
+            buf = resolve(dnames[0])
+            if buf in set(param_of.values()):
+                buf_numel, _ = _numel(fsym.get(buf, ""))
+                if buf_numel == res_numel:
+                    inplace_param = buf
+                    upd = fsym.get(dnames[1], "") \
+                        if len(dnames) > 1 else ""
+                    dus_update_bytes = _all_shapes_bytes(upd)
+                    break
+        if inplace_param is not None:
+            total += 2.0 * dus_update_bytes
+        else:
+            total += res_bytes
+
+        for i, nm in enumerate(names):
+            shp = sym.get(nm)
+            if not shp:
+                continue
+            full = _all_shapes_bytes(shp)
+            pname = param_of.get(i)
+            if pname is not None and pname == inplace_param:
+                continue          # the in-place buffer: not re-read
+            cons = consumers.get(pname, []) if pname else []
+            # look through view/convert chains to the real consumers
+            seen = set()
+            frontier = list(cons)
+            real = []
+            while frontier:
+                c = frontier.pop()
+                if c.name in seen:
+                    continue
+                seen.add(c.name)
+                if c.opcode in view_like:
+                    frontier.extend(consumers.get(c.name, []))
+                else:
+                    real.append(c)
+            if real and all(c.opcode in ("dynamic-slice", "slice",
+                                         "gather") for c in real):
+                eff = sum(_all_shapes_bytes(c.result) for c in real)
+                total += min(full, eff)
+            else:
+                total += full
+        return total
+
+    def _dot_flops(self, op: Op, sym: dict) -> float:
+        out_dims, _ = _shape_dims(op.result)
+        out_numel = 1
+        for d in out_dims:
+            out_numel *= d
+        m = _LHS_C_RE.search(op.line)
+        contract = 1
+        if m:
+            idxs = [int(x) for x in m.group(1).split(",") if x]
+            lhs_name = (self._operand_names(op) or [None])[0]
+            lhs_shape = sym.get(lhs_name, "")
+            ldims, _ = _shape_dims(lhs_shape)
+            for i in idxs:
+                if i < len(ldims):
+                    contract *= ldims[i]
+        return 2.0 * out_numel * contract
+
+    def _conv_flops(self, op: Op, sym: dict) -> float:
+        out_dims, _ = _shape_dims(op.result)
+        out_numel = 1
+        for d in out_dims:
+            out_numel *= d
+        m = _WINDOW_SIZE_RE.search(op.line)
+        ksize = 1
+        if m:
+            for x in m.group(1).split("x"):
+                ksize *= int(x)
+        names = self._operand_names(op)
+        cin = 1
+        if len(names) >= 2:
+            kdims, _ = _shape_dims(sym.get(names[1], ""))
+            if kdims:
+                cin = kdims[-2] if len(kdims) >= 2 else 1
+        return 2.0 * out_numel * ksize * cin
+
+
+def score_traffic(text: str, world: int, qc: int, kc: int) -> float:
+    """Traffic (bytes/device/step) of attention score-shaped tensors: any
+    op whose RESULT dims include both the q-chunk and kv-chunk sizes.
+    Used by the dry-run's Pallas-flash substitution — these are exactly
+    the tensors a fused kernel keeps in VMEM."""
+    total = 0.0
+    for row in trace_contributors(text, world, top=None):
+        tot, _per, _mult, kind, _comp, _opc, _name, res = row
+        if kind != "traffic":
+            continue
+        m = _SHAPE_RE.search(res)
+        if not m:
+            continue
+        dims = [int(x) for x in m.group(2).split(",") if x]
+        if qc in dims and kc in dims:
+            total += tot
+    return total
+
+
+def trace_contributors(text: str, world: int, top: int | None = 25):
+    """Non-memoized walk listing the largest traffic/flops/collective
+    contributors with their loop multipliers — the dry-run 'profiler'."""
+    an = HloAnalyzer(text, world)
+    out = []
+
+    def walk(name: str, mult: float, traffic_on: bool):
+        comp = an.comps.get(name)
+        if comp is None:
+            return
+        sym = an._sym[name]
+        for op in comp.ops:
+            oc = op.opcode
+            base_kind = oc[:-6] if oc.endswith("-start") else oc
+            if oc == "while":
+                m = _TRIP_RE.search(op.line)
+                trip = int(m.group(1)) if m else 1
+                b = _BODY_RE.search(op.line)
+                if b:
+                    walk(b.group(1), mult * trip, traffic_on)
+                continue
+            if oc in ("fusion", "call", "async-start"):
+                m = _CALLS_RE.search(op.line)
+                if m:
+                    walk(m.group(1), mult, False)
+                if traffic_on and oc != "async-start":
+                    t = an._fusion_traffic(op, sym,
+                                           m.group(1) if m else None)
+                    out.append((t * mult, t, mult, "traffic", name,
+                                op.opcode, op.name, op.result[:60]))
+                continue
+            if base_kind in _COLLECTIVES:
+                rb = _all_shapes_bytes(op.result)
+                n = _group_size(op.line, world)
+                w = _collective_wire(base_kind, rb, n)
+                out.append((w * mult, w, mult, f"coll[{n}]", name,
+                            base_kind, op.name, op.result[:60]))
+                continue
+            if oc == "dot":
+                f = an._dot_flops(op, sym)
+                out.append((f * mult / 1e3, f, mult, "flops", name,
+                            op.opcode, op.name, op.result[:60]))
+            if traffic_on and oc not in _NO_TRAFFIC:
+                t = an._op_traffic(op, sym)
+                out.append((t * mult, t, mult, "traffic", name, op.opcode,
+                            op.name, op.result[:60]))
+
+    entry = next((c for c in an.comps.values() if c.is_entry), None)
+    if entry:
+        walk(entry.name, 1.0, True)
+    out.sort(reverse=True)
+    return out if top is None else out[:top]
+
+
+def analyze(text: str, world: int) -> dict:
+    cost = HloAnalyzer(text, world).entry_cost()
+    return {
+        "flops": cost.flops,
+        "traffic_bytes": cost.traffic,
+        "collective_wire_bytes": cost.coll_wire,
+        "wire_by_kind": dict(cost.coll_by_kind),
+        "wire_by_group_size": {str(k): v
+                               for k, v in cost.coll_by_group.items()},
+        "n_collectives": cost.n_coll,
+    }
+
+
+if __name__ == "__main__":
+    import sys
+    text = open(sys.argv[1]).read()
+    world = int(sys.argv[2]) if len(sys.argv) > 2 else 256
+    print(json.dumps(analyze(text, world), indent=2))
+    if len(sys.argv) > 3 and sys.argv[3] == "--trace":
+        print("\ntop contributors (total, per-visit, mult, kind, comp, "
+              "opcode, name, result):")
+        for row in trace_contributors(text, world):
+            tot, per, mult, kind, comp, opc, name, res = row
+            print(f"  {tot:.3e}  per={per:.3e} x{mult:<6.0f} {kind:10s} "
+                  f"{opc:22s} {name[:28]:28s} {res}  [{comp[:40]}]")

@@ -1,0 +1,49 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module never touches jax device state.  The dry-run forces
+512 host-platform devices before any jax import; real launches build the
+same logical mesh from the actual fleet.
+
+Mesh semantics (see DESIGN.md §5):
+  single-pod: (16, 16)      axes ("data", "model")   = 256 chips (v5e pod)
+  multi-pod:  (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
+
+"pod" is the slow-link (DCN) axis: the launcher keeps only data-parallel
+gradient reduction on it.  Scaling to 1000+ nodes grows the "pod" axis; all
+sharding rules are written against axis *names*, so no model code changes.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.parallel import sharding as shd
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(max_devices: int | None = None) -> Mesh:
+    """Best-effort mesh over whatever devices exist (tests / CPU drivers):
+    a 1-D ("data",) mesh, optionally capped."""
+    devs = jax.devices()
+    if max_devices:
+        devs = devs[:max_devices]
+    import numpy as np
+    return Mesh(np.asarray(devs), ("data",))
+
+
+def activate(mesh: Mesh, rules_overrides: dict | None = None) -> Mesh:
+    """Install `mesh` as the process sharding context (logical-axis rules
+    from repro.parallel.sharding, with optional per-launch overrides)."""
+    rules = dict(shd.DEFAULT_RULES)
+    if rules_overrides:
+        rules.update(rules_overrides)
+    shd.set_context(mesh, rules)
+    return mesh

@@ -1,0 +1,325 @@
+"""Abstract shapes + shardings for every (architecture × input shape) cell.
+
+`input_specs(arch, shape)` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, zero allocation); the companion
+`*_shardings` builders give the jit-boundary NamedShardings.
+
+Parameter sharding is path-rule based (see `param_logical`): TP on the
+"model" axis for head/ffn/vocab/expert dims, FSDP over "data" on the
+d_model dim, with divisibility-aware fallback (a rule is dropped when the
+dim does not divide — probe-verified that jit *boundary* shardings must
+divide exactly, while internal constraints may be uneven).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.models import zoo
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig
+from repro.parallel.sharding import MeshContext, spec_for
+from repro.train import init_train_state, make_train_step, make_decode_step
+
+
+# --------------------------------------------------------------------------
+# parameter logical axes by path
+# --------------------------------------------------------------------------
+
+_COL_PARALLEL = {"wq", "wk", "wv", "gate", "up"}      # out-dim on "model"
+_ROW_PARALLEL = {"wo", "down"}                        # in-dim on "model"
+_REPLICATED_LEAVES = {"scale", "a_log", "dt_bias", "d_skip"}
+
+
+def param_logical(path: tuple[str, ...], ndim: int) -> tuple:
+    """Logical axes for one parameter leaf, padded with leading None for
+    stacked-layer / group dims."""
+    names = [p for p in path]
+    leaf = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    in_moe = "moe" in names and "shared" not in names
+    in_ssm = "ssm" in names or parent in ("in_proj", "out_proj", "conv")
+
+    if leaf == "table":                       # [vocab, d_model]
+        base = ("p_vocab", "p_embed")
+    elif in_moe and leaf in ("gate", "up"):   # [E, d, ff]
+        base = ("p_experts", "p_embed", None)
+    elif in_moe and leaf == "down":           # [E, ff, d]
+        base = ("p_experts", None, "p_embed")
+    elif in_moe and parent == "router":       # [d, E]
+        base = ("p_embed", None)
+    elif parent == "in_proj":                 # ssm fused in [d, X]
+        base = ("p_embed", None)
+    elif parent == "out_proj":                # ssm out [di, d]
+        base = (None, "p_embed")
+    elif parent == "conv":                    # depthwise conv [W, C] / [C]
+        base = (None,) * min(ndim, 2)
+    elif parent in _COL_PARALLEL and leaf == "w":
+        kind = "p_mlp" if parent in ("gate", "up") else "p_heads"
+        base = ("p_embed", kind)
+    elif parent in _COL_PARALLEL and leaf == "b":
+        base = ("p_mlp" if parent in ("gate", "up") else "p_heads",)
+    elif parent in _ROW_PARALLEL and leaf == "w":
+        kind = "p_mlp" if parent == "down" else "p_heads"
+        base = (kind, "p_embed")
+    elif parent in _ROW_PARALLEL and leaf == "b":
+        base = (None,)
+    elif leaf in _REPLICATED_LEAVES or leaf == "b":
+        base = (None,) * min(ndim, 1)
+    else:
+        base = ()
+
+    pad = ndim - len(base)
+    if pad < 0:        # leaf has fewer dims than the rule (e.g. scalar)
+        return (None,) * ndim
+    return (None,) * pad + tuple(base)
+
+
+def _key_name(k) -> str:
+    for attr in ("key", "name", "idx"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
+def _tree_shardings(tree, ctx: MeshContext, logical_fn):
+    """Map a pytree of ShapeDtypeStructs to NamedShardings."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        names = tuple(_key_name(k) for k in path)
+        logical = logical_fn(names, len(leaf.shape))
+        out.append(NamedSharding(ctx.mesh,
+                                 spec_for(leaf.shape, logical, ctx)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_shardings(params_abs, ctx: MeshContext):
+    return _tree_shardings(params_abs, ctx, param_logical)
+
+
+def state_shardings(state_abs, ctx: MeshContext):
+    """TrainState(params, opt{m,v,step}, step): m/v mirror the params."""
+    def logical(names, ndim):
+        names = tuple(n for n in names if n not in ("params", "opt",
+                                                    "m", "v"))
+        if not names or names[-1] == "step":
+            return (None,) * ndim
+        return param_logical(names, ndim)
+    return _tree_shardings(state_abs, ctx, logical)
+
+
+# --------------------------------------------------------------------------
+# activation / batch / cache shardings
+# --------------------------------------------------------------------------
+
+def _div_axes(dim: int, candidates: tuple[str, ...], ctx: MeshContext,
+              used: set) -> tuple[str, ...]:
+    """Longest prefix of unused mesh axes whose product divides `dim`."""
+    got: tuple[str, ...] = ()
+    acc = 1
+    for a in candidates:
+        if a not in ctx.mesh.shape or a in used:
+            continue
+        if dim % (acc * ctx.mesh.shape[a]) == 0:
+            acc *= ctx.mesh.shape[a]
+            got = got + (a,)
+    return got
+
+
+def _one(axes: tuple[str, ...]):
+    return None if not axes else (axes if len(axes) > 1 else axes[0])
+
+
+def batch_shardings(batch_abs: dict, ctx: MeshContext):
+    """tokens/targets [B, S] over ("pod","data"); memory [B, F, d] same."""
+    out = {}
+    for k, v in batch_abs.items():
+        used: set = set()
+        baxes = _div_axes(v.shape[0], ("pod", "data"), ctx, used)
+        used.update(baxes)
+        parts = [_one(baxes)] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(ctx.mesh, P(*parts))
+    return out
+
+
+def cache_shardings(cache_abs: dict, ctx: MeshContext):
+    """KV cache [L,B,T,KVH,D]; SSM state [L,B,nh,st,hd]; conv
+    [L,B,W-1,C]; memory [B,F,d]; length scalar.
+
+    Batch gets ("pod","data") when divisible; heads get "model"; when the
+    batch cannot shard (long_500k B=1) the cache *sequence* dim takes the
+    leftover axes (flash-decoding style sequence sharding)."""
+    out = {}
+    for key, v in cache_abs.items():
+        shape = v.shape
+        if key == "length" or len(shape) == 0:
+            out[key] = NamedSharding(ctx.mesh, P())
+            continue
+        if key == "memory":                     # [B, F, d]
+            b = _div_axes(shape[0], ("pod", "data"), ctx, set())
+            out[key] = NamedSharding(ctx.mesh, P(_one(b), None, None))
+            continue
+        used: set = set()
+        parts: list = [None] * len(shape)
+        if key in ("k", "v"):                   # [L, B, T, KVH, D]
+            b = _div_axes(shape[1], ("pod", "data"), ctx, used)
+            used.update(b)
+            h = _div_axes(shape[3], ("model",), ctx, used)
+            used.update(h)
+            t = _div_axes(shape[2], ("pod", "data", "model"), ctx, used)
+            parts[1], parts[2], parts[3] = _one(b), _one(t), _one(h)
+        elif key == "state":                    # [L, B, nh, st, hd]
+            b = _div_axes(shape[1], ("pod", "data"), ctx, used)
+            used.update(b)
+            h = _div_axes(shape[2], ("model",), ctx, used)
+            parts[1], parts[2] = _one(b), _one(h)
+        elif key == "conv":                     # [L, B, W-1, C]
+            b = _div_axes(shape[1], ("pod", "data"), ctx, used)
+            used.update(b)
+            c = _div_axes(shape[3], ("model",), ctx, used)
+            parts[1], parts[3] = _one(b), _one(c)
+        out[key] = NamedSharding(ctx.mesh, P(*parts))
+    return out
+
+
+# --------------------------------------------------------------------------
+# abstract inputs per cell
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    model: Any
+    kind: str                  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+def build_cell(arch: str, shape: str, *, overrides: dict | None = None
+               ) -> Cell:
+    cfg = configs.get(arch)
+    sh = configs.SHAPES[shape]
+    if not configs.shape_applicable(cfg, shape):
+        raise ValueError(f"{arch} × {shape}: skipped per DESIGN.md "
+                         "§Arch-applicability (full-attention at 500k)")
+    upd: dict = {}
+    if sh["kind"] in ("decode", "prefill"):
+        upd["max_cache_len"] = sh["seq_len"]
+    if overrides:
+        upd.update(overrides)
+    if upd:
+        cfg = dataclasses.replace(cfg, **upd)
+    model = zoo.build(cfg)
+    return Cell(arch, shape, cfg, model, sh["kind"], sh["seq_len"],
+                sh["global_batch"])
+
+
+def train_batch_abs(cell: Cell):
+    b, s = cell.global_batch, cell.seq_len
+    batch = {
+        "inputs": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "targets": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cell.cfg.n_frontend_tokens:
+        batch["memory"] = jax.ShapeDtypeStruct(
+            (b, cell.cfg.n_frontend_tokens, cell.cfg.d_model), jnp.float32)
+    return batch
+
+
+def abstract_state(cell: Cell):
+    return jax.eval_shape(
+        lambda k: init_train_state(cell.model, k), jax.random.key(0))
+
+
+def abstract_cache(cell: Cell, batch: int, max_len: int):
+    return jax.eval_shape(
+        lambda: cell.model.init_cache(batch, max_len))
+
+
+def input_specs(arch: str, shape: str = "train_4k",
+                overrides: dict | None = None):
+    """ShapeDtypeStruct stand-ins for every input of the cell's step
+    function, in the order the step takes them.  Returns (cell, args)."""
+    cell = build_cell(arch, shape, overrides=overrides)
+    if cell.kind == "train":
+        return cell, (abstract_state(cell), train_batch_abs(cell))
+    if cell.kind == "prefill":
+        params = jax.eval_shape(
+            lambda k: cell.model.init(k), jax.random.key(0))
+        cache = abstract_cache(cell, cell.global_batch, cell.seq_len)
+        args = [params,
+                jax.ShapeDtypeStruct((cell.global_batch, cell.seq_len),
+                                     jnp.int32), cache]
+        if cell.cfg.n_frontend_tokens:
+            args.append(jax.ShapeDtypeStruct(
+                (cell.global_batch, cell.cfg.n_frontend_tokens,
+                 cell.cfg.d_model), jnp.float32))
+        return cell, tuple(args)
+    # decode: serve_step(params, cache, tokens) with a full cache of seq_len
+    params = jax.eval_shape(lambda k: cell.model.init(k), jax.random.key(0))
+    cache = abstract_cache(cell, cell.global_batch, cell.seq_len)
+    tokens = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
+    return cell, (params, cache, tokens)
+
+
+# --------------------------------------------------------------------------
+# step functions + jit shardings per cell
+# --------------------------------------------------------------------------
+
+def step_and_shardings(cell: Cell, ctx: MeshContext, args):
+    """Returns (step_fn, in_shardings, out_shardings, donate_argnums)."""
+    repl = NamedSharding(ctx.mesh, P())
+    if cell.kind == "train":
+        state_abs, batch_abs = args
+        st_sh = state_shardings(state_abs, ctx)
+        bt_sh = batch_shardings(batch_abs, ctx)
+        step = make_train_step(cell.model, AdamWConfig())
+        # metrics: replicated scalars
+        metrics_sh = jax.tree.map(
+            lambda _: repl,
+            jax.eval_shape(step, state_abs, batch_abs)[1])
+        return step, (st_sh, bt_sh), (st_sh, metrics_sh), (0,)
+
+    if cell.kind == "prefill":
+        params_abs, tokens_abs, cache_abs = args[0], args[1], args[2]
+        p_sh = param_shardings(params_abs, ctx)
+        c_sh = cache_shardings(cache_abs, ctx)
+        t_sh = batch_shardings({"inputs": tokens_abs}, ctx)["inputs"]
+        if len(args) == 4:
+            m_sh = batch_shardings({"memory": args[3]}, ctx)["memory"]
+
+            def step(params, tokens, cache, memory):
+                return cell.model.prefill(params, tokens, cache,
+                                          memory=memory)
+            in_sh = (p_sh, t_sh, c_sh, m_sh)
+        else:
+            def step(params, tokens, cache):
+                return cell.model.prefill(params, tokens, cache)
+            in_sh = (p_sh, t_sh, c_sh)
+        logits_sh = NamedSharding(
+            ctx.mesh, P(t_sh.spec[0], None,
+                        "model" if cell.cfg.vocab_size
+                        % ctx.mesh.shape["model"] == 0 else None))
+        return step, in_sh, (logits_sh, c_sh), (2,)
+
+    # decode
+    params_abs, cache_abs, tokens_abs = args
+    p_sh = param_shardings(params_abs, ctx)
+    c_sh = cache_shardings(cache_abs, ctx)
+    t_sh = batch_shardings({"inputs": tokens_abs}, ctx)["inputs"]
+    decode = make_decode_step(cell.model)
+    logits_sh = NamedSharding(
+        ctx.mesh, P(t_sh.spec[0], None,
+                    "model" if cell.cfg.vocab_size
+                    % ctx.mesh.shape["model"] == 0 else None))
+    return (decode, (p_sh, c_sh, t_sh),
+            (t_sh, logits_sh, c_sh), (1,))

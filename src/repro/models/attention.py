@@ -1,0 +1,332 @@
+"""Attention: GQA with chunked (flash-style) softmax, sliding windows,
+cross-attention, and KV-cache decode.
+
+Memory discipline: training/prefill never materializes the full [S, T] score
+matrix — a double scan over (q chunks × kv chunks) carries the online
+softmax state (m, l, acc), bounding live intermediates to
+[B, H, q_chunk, kv_chunk].  This is the jnp analogue of a Pallas flash
+kernel; XLA fuses the inner body.  (The paper's compute hot-spot is the join
+kernels — attention stays pure JAX per DESIGN.md §3.)
+
+Decode attends one query position against the cache: [B, H, 1, T] scores are
+linear in T and cheap even at T = 524288, batch 1 (long_500k).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.parallel import shard
+
+NEG_INF = -2.0e38
+
+
+def init_attention(key, cfg, d_model=None):
+    d = d_model or cfg.d_model
+    hd, nq, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": layers.init_linear(k1, d, nq * hd, bias=cfg.qkv_bias,
+                                 logical=("p_embed", "p_heads")),
+        "wk": layers.init_linear(k2, d, nkv * hd, bias=cfg.qkv_bias,
+                                 logical=("p_embed", "p_heads")),
+        "wv": layers.init_linear(k3, d, nkv * hd, bias=cfg.qkv_bias,
+                                 logical=("p_embed", "p_heads")),
+        "wo": layers.init_linear(k4, nq * hd, d,
+                                 logical=("p_heads", "p_embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rms_norm(hd)
+        p["k_norm"] = layers.init_rms_norm(hd)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions, theta):
+    b, s, _ = x.shape
+    hd, nq, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = layers.linear(x, p["wq"]["w"], p["wq"].get("b")).reshape(b, s, nq, hd)
+    k = layers.linear(x, p["wk"]["w"], p["wk"].get("b")).reshape(b, s, nkv, hd)
+    v = layers.linear(x, p["wv"]["w"], p["wv"].get("b")).reshape(b, s, nkv, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"]["scale"], cfg.norm_eps)
+        k = layers.rms_norm(k, p["k_norm"]["scale"], cfg.norm_eps)
+    if theta is not None:
+        q = layers.rope(q, positions, theta)
+        k = layers.rope(k, positions, theta)
+    q = shard(q, ("batch", "seq", "heads", None))
+    k = shard(k, ("batch", "seq", "kv_heads", None))
+    v = shard(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def flash_attention(q, k, v, qpos, kpos, *, causal=True, window=0,
+                    q_chunk=512, kv_chunk=1024):
+    """Memory-bounded attention.  q: [B,S,H,D], k/v: [B,T,KVH,D].
+    Returns [B,S,H,D] in q.dtype.
+
+    Perf-iteration notes (EXPERIMENTS.md §Perf, dense-train cells):
+      * chunks are sliced out of the NATURAL [B,S,...] layout inside the
+        scan (dynamic_slice) — the previous pre-transposed chunk stacking
+        materialized two full [B,S,KVH,D]-sized layout copies per layer;
+      * all dots keep bf16 operands with f32 accumulation
+        (``preferred_element_type``) — no f32 copies of q/k/v;
+      * probabilities are cast to the value dtype for the PV matmul
+        (halves the second dot's input traffic; standard TPU flash);
+      * einsum orders are dot_general-natural ([b,h,q,g,k]) so no
+        transpose fusions appear between the mask/exp chain and the dots.
+    """
+    b, s_len, nq, d = q.shape
+    t_len, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    scale = 1.0 / (d ** 0.5)
+
+    q_chunk = min(q_chunk, s_len)
+    kv_chunk = min(kv_chunk, t_len)
+    nqc = -(-s_len // q_chunk)
+    nkc = -(-t_len // kv_chunk)
+
+    def pad_to(x, axis, size):
+        pad = size - x.shape[axis]
+        if pad == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(x, widths)
+
+    qg = pad_to(q.reshape(b, s_len, nkv, g, d), 1, nqc * q_chunk)
+    qpos_p = pad_to(qpos, 1, nqc * q_chunk)
+    kp = pad_to(k, 1, nkc * kv_chunk)
+    vp = pad_to(v, 1, nkc * kv_chunk)
+    kpos_p = pad_to(kpos + 1, 1, nkc * kv_chunk) - 1   # pad -> pos -1
+
+    w = jnp.asarray(window, jnp.int32)   # traced per-layer window; 0 = full
+
+    def q_step(_, i):
+        qi = jax.lax.dynamic_slice_in_dim(qg, i * q_chunk, q_chunk, 1)
+        qp = jax.lax.dynamic_slice_in_dim(qpos_p, i * q_chunk, q_chunk, 1)
+        dq = qp[:, None, :, None, None]                 # [B,1,qc,1,1]
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kj = jax.lax.dynamic_slice_in_dim(kp, j * kv_chunk, kv_chunk, 1)
+            vj = jax.lax.dynamic_slice_in_dim(vp, j * kv_chunk, kv_chunk, 1)
+            kpj = jax.lax.dynamic_slice_in_dim(kpos_p, j * kv_chunk,
+                                               kv_chunk, 1)
+            # scores [B,KVH,qc,G,kc]: bf16 dot, f32 accumulate
+            s = jnp.einsum("bqhgd,bkhd->bhqgk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            dk = kpj[:, None, None, None, :]            # [B,1,1,1,kc]
+            mask = dk >= 0
+            if causal:
+                mask = mask & (dk <= dq)
+            mask = mask & ((w <= 0) | (dk > dq - w))
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            # all-masked guard: keep exp() arguments at -inf, not nan
+            safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+            p = jnp.exp(s - safe[..., None])            # [B,KVH,qc,G,kc]
+            corr = jnp.exp(m - safe)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhqgk,bkhd->bhqgd", p.astype(vj.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, nkv, q_chunk, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, nkv, q_chunk, g), jnp.float32)
+        a0 = jnp.zeros((b, nkv, q_chunk, g, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nkc))
+        out = acc / jnp.maximum(l[..., None], 1e-30)    # [B,KVH,qc,G,D]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nqc))
+    # [nqc,B,KVH,qc,G,D] -> [B,S,H,D] (single layout fix-up at the end)
+    out = outs.transpose(1, 0, 3, 2, 4, 5).reshape(
+        b, nqc * q_chunk, nq, d)[:, :s_len]
+    return out
+
+
+def self_attention(p, cfg, x, positions, *, causal=True, window=0,
+                   theta=None, return_kv=False):
+    """Full self-attention sub-layer (projections + flash + output).
+
+    §Perf note: checkpointing the flash core (it-1b) was REFUTED — with
+    per-block remat already on, recompute-in-backward at the HLO level
+    only adds another pass over the score tensors.  Score traffic is
+    irreducible without kernel fusion; see kernels/flash_attention.py."""
+    b, s, _ = x.shape
+    theta = cfg.rope_theta if theta is None else theta
+    q, k, v = _project_qkv(p, cfg, x, positions, theta)
+    out = flash_attention(q, k, v, positions, positions, causal=causal,
+                          window=window)
+    out = out.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    out = layers.linear(out, p["wo"]["w"])
+    if return_kv:
+        return out, k, v
+    return out
+
+
+def cross_attention(p, cfg, x, memory, positions):
+    """Decoder→encoder / text→vision cross-attention (no mask, no rope on
+    memory side beyond its own precomputed embedding)."""
+    b, s, _ = x.shape
+    t = memory.shape[1]
+    hd, nq, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = layers.linear(x, p["wq"]["w"], p["wq"].get("b")).reshape(b, s, nq, hd)
+    k = layers.linear(memory, p["wk"]["w"],
+                      p["wk"].get("b")).reshape(b, t, nkv, hd)
+    v = layers.linear(memory, p["wv"]["w"],
+                      p["wv"].get("b")).reshape(b, t, nkv, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"]["scale"], cfg.norm_eps)
+        k = layers.rms_norm(k, p["k_norm"]["scale"], cfg.norm_eps)
+    mpos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    out = flash_attention(q, k, v, positions, mpos, causal=False)
+    out = out.reshape(b, s, nq * hd)
+    return layers.linear(out, p["wo"]["w"])
+
+
+# --------------------------------------------------------------------------
+# KV cache (decode)
+# --------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch, max_len, n_layers=None, dtype=jnp.bfloat16):
+    """[L, B, T, KVH, D] stacked cache (+ current length)."""
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    shape = (nl, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_attention(p, cfg, x, layer_k, layer_v, length, *, window=0,
+                     theta=None):
+    """One-token self-attention against the cache.
+
+    x: [B, 1, d]; layer_k/v: [B, T, KVH, D] (already containing this step's
+    k/v at index `length`); returns [B, 1, d].
+    """
+    b = x.shape[0]
+    t = layer_k.shape[1]
+    hd, nq, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    g = nq // nkv
+    theta = cfg.rope_theta if theta is None else theta
+
+    pos = jnp.broadcast_to(length[None, None], (b, 1))
+    q = layers.linear(x, p["wq"]["w"], p["wq"].get("b")).reshape(b, 1, nq, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"]["scale"], cfg.norm_eps)
+    if theta is not None:
+        q = layers.rope(q, pos, theta)
+    qg = q.reshape(b, 1, nkv, g, hd)
+
+    # bf16 operands, f32 accumulation: no f32 copy of the cache (the
+    # baseline's operand upcasts made XLA hoist TWO full f32 cache-stack
+    # conversions out of the layer loop — EXPERIMENTS.md §Perf decode)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, layer_k.astype(qg.dtype),
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    kpos = jnp.arange(t, dtype=jnp.int32)[None, None, None, None, :]
+    mask = kpos <= length
+    w = jnp.asarray(window, jnp.int32)   # traced per-layer window; 0 = full
+    mask = mask & ((w <= 0) | (kpos > length - w))
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", w.astype(layer_v.dtype),
+                     layer_v, preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, nq * hd).astype(x.dtype)
+    return layers.linear(out, p["wo"]["w"])
+
+
+def project_kv_token(p, cfg, x, length, *, theta=None):
+    """This step's k/v [B,1,KVH,D] WITHOUT writing the cache (§Perf
+    decode-it-3: the scan emits these tiny tensors as ys and the caller
+    does ONE in-place update on the stacked cache, instead of rewriting a
+    full [B,T,KVH,D] buffer per layer)."""
+    b = x.shape[0]
+    hd, nkv = cfg.head_dim, cfg.n_kv_heads
+    theta = cfg.rope_theta if theta is None else theta
+    pos = jnp.broadcast_to(length[None, None], (b, 1))
+    k = layers.linear(x, p["wk"]["w"], p["wk"].get("b")).reshape(b, 1, nkv, hd)
+    v = layers.linear(x, p["wv"]["w"], p["wv"].get("b")).reshape(b, 1, nkv, hd)
+    if cfg.qk_norm:
+        k = layers.rms_norm(k, p["k_norm"]["scale"], cfg.norm_eps)
+    if theta is not None:
+        k = layers.rope(k, pos, theta)
+    return k, v
+
+
+def decode_attention_append(p, cfg, x, layer_k, layer_v, k_new, v_new,
+                            length, *, window=0, theta=None):
+    """One-token attention: cache scores (positions < length) + the new
+    token's self-score computed separately — the cache tensors are READ
+    ONLY (no per-layer write-back)."""
+    b = x.shape[0]
+    t = layer_k.shape[1]
+    hd, nq, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    g = nq // nkv
+    theta = cfg.rope_theta if theta is None else theta
+
+    pos = jnp.broadcast_to(length[None, None], (b, 1))
+    q = layers.linear(x, p["wq"]["w"], p["wq"].get("b")).reshape(b, 1, nq, hd)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["q_norm"]["scale"], cfg.norm_eps)
+    if theta is not None:
+        q = layers.rope(q, pos, theta)
+    qg = q.reshape(b, 1, nkv, g, hd)
+
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, layer_k.astype(qg.dtype),
+                   preferred_element_type=jnp.float32) / (hd ** 0.5)
+    kpos = jnp.arange(t, dtype=jnp.int32)[None, None, None, None, :]
+    mask = kpos < length                       # strictly-past cache slots
+    w = jnp.asarray(window, jnp.int32)
+    mask = mask & ((w <= 0) | (kpos > length - w))
+    s = jnp.where(mask, s, NEG_INF)
+    s_new = jnp.einsum("bqkgd,btkd->bkgqt", qg, k_new.astype(qg.dtype),
+                       preferred_element_type=jnp.float32) / (hd ** 0.5)
+    sc = jnp.concatenate([s, s_new], axis=-1)  # [B,KVH,G,1,T+1]
+    wts = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", wts[..., :t].astype(layer_v.dtype),
+                     layer_v, preferred_element_type=jnp.float32) \
+        + jnp.einsum("bkgqt,btkd->bqkgd", wts[..., t:].astype(v_new.dtype),
+                     v_new, preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, nq * hd).astype(x.dtype)
+    return layers.linear(out, p["wo"]["w"])
+
+
+def write_kv_stack(cache_k, cache_v, ks, vs, length):
+    """One in-place update of the stacked [L,B,T,KVH,D] cache at position
+    `length` with the scan-collected per-layer k/v [L,B,1,KVH,D]."""
+    new_k = jax.lax.dynamic_update_slice(
+        cache_k, ks.astype(cache_k.dtype),
+        (0, 0, length, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(
+        cache_v, vs.astype(cache_v.dtype),
+        (0, 0, length, 0, 0))
+    return new_k, new_v
+
+
+def append_kv(p, cfg, x, layer_k, layer_v, length, *, theta=None):
+    """Project this step's k/v and write them at `length`; returns updated
+    (k, v) buffers."""
+    b = x.shape[0]
+    hd, nkv = cfg.head_dim, cfg.n_kv_heads
+    theta = cfg.rope_theta if theta is None else theta
+    pos = jnp.broadcast_to(length[None, None], (b, 1))
+    k = layers.linear(x, p["wk"]["w"], p["wk"].get("b")).reshape(b, 1, nkv, hd)
+    v = layers.linear(x, p["wv"]["w"], p["wv"].get("b")).reshape(b, 1, nkv, hd)
+    if cfg.qk_norm:
+        k = layers.rms_norm(k, p["k_norm"]["scale"], cfg.norm_eps)
+    if theta is not None:
+        k = layers.rope(k, pos, theta)
+    layer_k = jax.lax.dynamic_update_slice_in_dim(
+        layer_k, k.astype(layer_k.dtype), length, axis=1)
+    layer_v = jax.lax.dynamic_update_slice_in_dim(
+        layer_v, v.astype(layer_v.dtype), length, axis=1)
+    return layer_k, layer_v

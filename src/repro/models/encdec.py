@@ -1,0 +1,177 @@
+"""Encoder-decoder backbone (seamless-m4t-medium).
+
+The modality frontend is a STUB per the assignment: `input_specs()` provides
+precomputed frame embeddings [B, S_enc, d_model] (the speech conv frontend
+is not part of the backbone).  The encoder is a bidirectional transformer
+stack over those frames; the decoder is causal self-attention +
+cross-attention to the encoder memory.  Decode shapes run the
+autoregressive decoder with a cached encoder memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, transformer
+from repro.models.config import ModelConfig
+from repro.parallel import shard
+
+
+def init_dec_block(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln_attn": layers.init_rms_norm(cfg.d_model),
+        "attn": attention.init_attention(k1, cfg),
+        "ln_cross": layers.init_rms_norm(cfg.d_model),
+        "xattn": attention.init_attention(k2, cfg),
+        "ln_mlp": layers.init_rms_norm(cfg.d_model),
+        "mlp": layers.init_glu_mlp(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "embed": layers.init_embed(k1, cfg.vocab_size, cfg.d_model),
+        "enc_layers": transformer._stack_init(
+            lambda k: transformer.init_block(k, cfg), k2, cfg.n_enc_layers),
+        "enc_norm": layers.init_rms_norm(cfg.d_model),
+        "dec_layers": transformer._stack_init(
+            lambda k: init_dec_block(k, cfg), k3, cfg.n_layers),
+        "final_norm": layers.init_rms_norm(cfg.d_model),
+        "lm_head": layers.init_embed(k4, cfg.vocab_size, cfg.d_model),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: [B, S_enc, d_model] stub embeddings → encoder memory."""
+    b, s, _ = frames.shape
+    x = shard(frames.astype(layers.dtype_of(cfg.dtype)),
+              ("batch", "seq", "embed"))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def one_block(x, p):
+        h = layers.rms_norm(x, p["ln_attn"]["scale"], cfg.norm_eps)
+        x = x + attention.self_attention(p["attn"], cfg, h, positions,
+                                         causal=False)
+        h = layers.rms_norm(x, p["ln_mlp"]["scale"], cfg.norm_eps)
+        return x + layers.glu_mlp(h, p["mlp"], cfg.act)
+
+    if cfg.remat:
+        one_block = jax.checkpoint(one_block)
+
+    def step(x, p):
+        return one_block(x, p), None
+
+    x, _ = jax.lax.scan(step, x, params["enc_layers"])
+    return layers.rms_norm(x, params["enc_norm"]["scale"], cfg.norm_eps)
+
+
+def _dec_block(p, cfg, x, positions, memory):
+    h = layers.rms_norm(x, p["ln_attn"]["scale"], cfg.norm_eps)
+    x = x + attention.self_attention(p["attn"], cfg, h, positions,
+                                     causal=True)
+    h = layers.rms_norm(x, p["ln_cross"]["scale"], cfg.norm_eps)
+    x = x + attention.cross_attention(p["xattn"], cfg, h, memory, positions)
+    h = layers.rms_norm(x, p["ln_mlp"]["scale"], cfg.norm_eps)
+    return x + layers.glu_mlp(h, p["mlp"], cfg.act)
+
+
+def forward(params, cfg: ModelConfig, tokens, memory=None):
+    """Teacher-forced decode over `tokens` given encoder `memory`
+    ([B, S_enc, d] stub frame embeddings, pre-encoder)."""
+    b, s = tokens.shape
+    mem = encode(params, cfg, memory)
+    dt = layers.dtype_of(cfg.dtype)
+    x = layers.embed(tokens, params["embed"]["table"], dt)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def one_block(x, p):
+        return _dec_block(p, cfg, x, positions, mem)
+
+    if cfg.remat:
+        one_block = jax.checkpoint(one_block)
+
+    def step(x, p):
+        return one_block(x, p), None
+
+    x, _ = jax.lax.scan(step, x, params["dec_layers"])
+    x = layers.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return layers.unembed(x, params["lm_head"]["table"]), {}
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    cache = attention.init_kv_cache(cfg, batch, max_len, dtype=dtype)
+    cache["memory"] = jnp.zeros(
+        (batch, cfg.n_frontend_tokens, cfg.d_model), dtype)
+    return cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, memory=None):
+    """Encode the source, then run the decoder over the target prefix,
+    filling the self-attention cache."""
+    b, s = tokens.shape
+    mem = encode(params, cfg, memory)
+    cache = dict(cache, memory=mem.astype(cache["memory"].dtype))
+    dt = layers.dtype_of(cfg.dtype)
+    x = layers.embed(tokens, params["embed"]["table"], dt)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def one_block(x, p):
+        h = layers.rms_norm(x, p["ln_attn"]["scale"], cfg.norm_eps)
+        out, kk, vv = attention.self_attention(p["attn"], cfg, h, positions,
+                                               causal=True, return_kv=True)
+        x = x + out
+        h = layers.rms_norm(x, p["ln_cross"]["scale"], cfg.norm_eps)
+        x = x + attention.cross_attention(p["xattn"], cfg, h, mem, positions)
+        h = layers.rms_norm(x, p["ln_mlp"]["scale"], cfg.norm_eps)
+        return x + layers.glu_mlp(h, p["mlp"], cfg.act), kk, vv
+
+    if cfg.remat:
+        one_block = jax.checkpoint(one_block)
+
+    def step(x, p):
+        x, kk, vv = one_block(x, p)
+        return x, (kk, vv)
+
+    x, (ks, vs) = jax.lax.scan(step, x, params["dec_layers"])
+    new_k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], ks.astype(cache["k"].dtype), 0, axis=2)
+    new_v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], vs.astype(cache["v"].dtype), 0, axis=2)
+    x = layers.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = layers.unembed(x[:, -1:], params["lm_head"]["table"])
+    return logits, dict(cache, k=new_k, v=new_v,
+                        length=jnp.asarray(s, jnp.int32))
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    b = tokens.shape[0]
+    dt = layers.dtype_of(cfg.dtype)
+    x = layers.embed(tokens, params["embed"]["table"], dt)
+    length = cache["length"]
+    mem = cache["memory"]
+    pos = jnp.broadcast_to(length[None, None], (b, 1))
+
+    def step(x, xs):
+        p, lk, lv = xs
+        h = layers.rms_norm(x, p["ln_attn"]["scale"], cfg.norm_eps)
+        lk, lv = attention.append_kv(p["attn"], cfg, h, lk, lv, length)
+        x = x + attention.decode_attention(p["attn"], cfg, h, lk, lv, length)
+        h = layers.rms_norm(x, p["ln_cross"]["scale"], cfg.norm_eps)
+        x = x + attention.cross_attention(p["xattn"], cfg, h, mem, pos)
+        h = layers.rms_norm(x, p["ln_mlp"]["scale"], cfg.norm_eps)
+        x = x + layers.glu_mlp(h, p["mlp"], cfg.act)
+        return x, (lk, lv)
+
+    x, (nk, nv) = jax.lax.scan(step, x,
+                               (params["dec_layers"], cache["k"], cache["v"]))
+    x = layers.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = layers.unembed(x, params["lm_head"]["table"])
+    return logits, dict(cache, k=nk, v=nv, length=length + 1)

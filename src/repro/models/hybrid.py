@@ -1,0 +1,264 @@
+"""SSM (mamba2) and hybrid (zamba2) language models.
+
+mamba2-370m: a pure stack of SSD blocks (attention-free).
+zamba2-1.2b: a Mamba2 backbone with ONE shared transformer block (attention
++ MLP, single parameter set) invoked after every `hybrid_every` SSM layers —
+the Zamba2 weight-sharing trick (arXiv:2411.15242).  Simplifications vs. the
+released model (documented in DESIGN.md): no per-invocation LoRA on the
+shared block and the shared block consumes the running hidden state directly
+(no concat with the original embedding).
+
+Both families carry O(1)-per-token state, so they own the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, ssm, transformer
+from repro.models.config import ModelConfig
+from repro.parallel import shard
+
+
+def init_ssm_block(key, cfg):
+    return {
+        "ln": layers.init_rms_norm(cfg.d_model),
+        "ssm": ssm.init_ssm(key, cfg),
+    }
+
+
+def _ssm_block_forward(p, cfg, x):
+    h = layers.rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+    x = x + ssm.ssd_forward(h, p["ssm"], cfg)
+    return shard(x, ("batch", "seq_res", "embed"))
+
+
+def _ssm_block_decode(p, cfg, x, state, conv):
+    h = layers.rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+    y, state, conv = ssm.ssd_decode_step(h, p["ssm"], cfg, state, conv)
+    return x + y, state, conv
+
+
+def init_lm(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "embed": layers.init_embed(k1, cfg.vocab_size, cfg.d_model),
+        "layers": transformer._stack_init(
+            lambda k: init_ssm_block(k, cfg), k2, cfg.n_layers),
+        "final_norm": layers.init_rms_norm(cfg.d_model),
+    }
+    if cfg.is_hybrid:
+        params["shared_block"] = transformer.init_block(k3, cfg)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.init_embed(k4, cfg.vocab_size, cfg.d_model)
+    return params
+
+
+def _n_shared_invocations(cfg) -> int:
+    return cfg.n_layers // cfg.hybrid_every if cfg.is_hybrid else 0
+
+
+def _split_groups(cfg, stacked):
+    """[L, ...] ssm stack -> ([G, every, ...] grouped, [tail, ...])."""
+    n_inv = _n_shared_invocations(cfg)
+    main = n_inv * cfg.hybrid_every
+    grouped = jax.tree.map(
+        lambda a: a[:main].reshape((n_inv, cfg.hybrid_every) + a.shape[1:]),
+        stacked)
+    tail = jax.tree.map(lambda a: a[main:], stacked)
+    return grouped, tail
+
+
+def forward(params, cfg: ModelConfig, tokens, memory=None):
+    del memory
+    b, s = tokens.shape
+    dt = layers.dtype_of(cfg.dtype)
+    x = layers.embed(tokens, params["embed"]["table"], dt)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    block = _ssm_block_forward
+    if cfg.remat:
+        block = jax.checkpoint(block, static_argnums=(1,))
+
+    def ssm_scan(x, stacked):
+        def step(x, p):
+            return block(p, cfg, x), None
+        x, _ = jax.lax.scan(step, x, stacked)
+        return x
+
+    if not cfg.is_hybrid:
+        x = ssm_scan(x, params["layers"])
+    else:
+        grouped, tail = _split_groups(cfg, params["layers"])
+
+        def shared(x):
+            y, _ = transformer.block_forward(
+                params["shared_block"], cfg, x, positions,
+                jnp.int32(0), jnp.float32(cfg.rope_theta))
+            return y
+
+        if cfg.remat:
+            shared = jax.checkpoint(shared)
+
+        def group_step(x, ps):
+            x = ssm_scan(x, ps)
+            return shared(x), None
+
+        x, _ = jax.lax.scan(group_step, x, grouped)
+        x = ssm_scan(x, tail)
+
+    x = layers.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["lm_head"]["table"])
+    return layers.unembed(x, table), {}
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    cache = ssm.init_ssm_cache(cfg, batch, cfg.n_layers)
+    cache["length"] = jnp.zeros((), jnp.int32)
+    if cfg.is_hybrid:
+        n_inv = _n_shared_invocations(cfg)
+        kv = attention.init_kv_cache(cfg, batch, max_len, n_layers=n_inv,
+                                     dtype=dtype)
+        cache["k"], cache["v"] = kv["k"], kv["v"]
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    b = tokens.shape[0]
+    dt = layers.dtype_of(cfg.dtype)
+    x = layers.embed(tokens, params["embed"]["table"], dt)
+    length = cache["length"]
+
+    def ssm_scan(x, stacked, states, convs):
+        def step(x, xs):
+            p, st, cv = xs
+            x, st, cv = _ssm_block_decode(p, cfg, x, st, cv)
+            return x, (st, cv)
+        x, (new_st, new_cv) = jax.lax.scan(step, x, (stacked, states, convs))
+        return x, new_st, new_cv
+
+    if not cfg.is_hybrid:
+        x, new_state, new_conv = ssm_scan(x, params["layers"],
+                                          cache["state"], cache["conv"])
+        new_cache = dict(cache, state=new_state, conv=new_conv,
+                         length=length + 1)
+    else:
+        n_inv = _n_shared_invocations(cfg)
+        main = n_inv * cfg.hybrid_every
+        grouped, tail = _split_groups(cfg, params["layers"])
+        st_g = jax.tree.map(
+            lambda a: a[:main].reshape((n_inv, cfg.hybrid_every)
+                                       + a.shape[1:]), cache["state"])
+        cv_g = jax.tree.map(
+            lambda a: a[:main].reshape((n_inv, cfg.hybrid_every)
+                                       + a.shape[1:]), cache["conv"])
+        sb = params["shared_block"]
+
+        def shared_decode(x, lk, lv):
+            h = layers.rms_norm(x, sb["ln_attn"]["scale"], cfg.norm_eps)
+            lk, lv = attention.append_kv(sb["attn"], cfg, h, lk, lv, length)
+            x = x + attention.decode_attention(sb["attn"], cfg, h, lk, lv,
+                                               length)
+            h = layers.rms_norm(x, sb["ln_mlp"]["scale"], cfg.norm_eps)
+            x = x + layers.glu_mlp(h, sb["mlp"], cfg.act)
+            return x, lk, lv
+
+        def group_step(x, xs):
+            ps, sts, cvs, lk, lv = xs
+            x, new_st, new_cv = ssm_scan(x, ps, sts, cvs)
+            x, lk, lv = shared_decode(x, lk, lv)
+            return x, (new_st, new_cv, lk, lv)
+
+        x, (st_new, cv_new, k_new, v_new) = jax.lax.scan(
+            group_step, x, (grouped, st_g, cv_g, cache["k"], cache["v"]))
+        x, st_tail, cv_tail = ssm_scan(
+            x, tail, jax.tree.map(lambda a: a[main:], cache["state"]),
+            jax.tree.map(lambda a: a[main:], cache["conv"]))
+        new_state = jnp.concatenate(
+            [st_new.reshape((main,) + st_new.shape[2:]), st_tail], axis=0)
+        new_conv = jnp.concatenate(
+            [cv_new.reshape((main,) + cv_new.shape[2:]), cv_tail], axis=0)
+        new_cache = dict(cache, state=new_state, conv=new_conv, k=k_new,
+                         v=v_new, length=length + 1)
+
+    x = layers.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["lm_head"]["table"])
+    return layers.unembed(x, table), new_cache
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, memory=None):
+    """Full-sequence prefill: chunked SSD per layer, capturing the final
+    recurrent state + conv window of every layer (and the shared block's
+    K/V for the hybrid) — all under layer scans."""
+    del memory
+    b, s = tokens.shape
+    dt = layers.dtype_of(cfg.dtype)
+    x = layers.embed(tokens, params["embed"]["table"], dt)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    length = jnp.asarray(s, jnp.int32)
+
+    def one_layer(x, p):
+        h = layers.rms_norm(x, p["ln"]["scale"], cfg.norm_eps)
+        y, st, cv = ssm.ssd_prefill(h, p["ssm"], cfg)
+        return x + y, st, cv
+
+    if cfg.remat:
+        one_layer = jax.checkpoint(one_layer)
+
+    def ssm_scan(x, stacked):
+        def step(x, p):
+            x, st, cv = one_layer(x, p)
+            return x, (st, cv)
+        return jax.lax.scan(step, x, stacked)
+
+    if not cfg.is_hybrid:
+        x, (states, convs) = ssm_scan(x, params["layers"])
+        new_cache = dict(cache, state=states, conv=convs, length=length)
+    else:
+        grouped, tail = _split_groups(cfg, params["layers"])
+        sb = params["shared_block"]
+
+        def shared_prefill(x):
+            h = layers.rms_norm(x, sb["ln_attn"]["scale"], cfg.norm_eps)
+            out, kk, vv = attention.self_attention(
+                sb["attn"], cfg, h, positions, causal=True, return_kv=True)
+            x = x + out
+            h = layers.rms_norm(x, sb["ln_mlp"]["scale"], cfg.norm_eps)
+            return x + layers.glu_mlp(h, sb["mlp"], cfg.act), kk, vv
+
+        if cfg.remat:
+            shared_prefill = jax.checkpoint(shared_prefill)
+
+        def group_step(x, ps):
+            x, (sts, cvs) = ssm_scan(x, ps)
+            x, kk, vv = shared_prefill(x)
+            return x, (sts, cvs, kk, vv)
+
+        x, (st_g, cv_g, ks, vs) = jax.lax.scan(group_step, x, grouped)
+        x, (st_t, cv_t) = ssm_scan(x, tail)
+        main = st_g.shape[0] * st_g.shape[1]
+        states = jnp.concatenate(
+            [st_g.reshape((main,) + st_g.shape[2:]), st_t], axis=0)
+        convs = jnp.concatenate(
+            [cv_g.reshape((main,) + cv_g.shape[2:]), cv_t], axis=0)
+        # write shared-block K/V ([n_inv, B, S, KVH, D]) into cache prefix
+        new_k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], ks.astype(cache["k"].dtype), 0, axis=2)
+        new_v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], vs.astype(cache["v"].dtype), 0, axis=2)
+        new_cache = dict(cache, state=states, conv=convs, k=new_k, v=new_v,
+                         length=length)
+
+    x = layers.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["lm_head"]["table"])
+    logits = layers.unembed(x[:, -1:], table)
+    return logits, new_cache

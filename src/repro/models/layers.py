@@ -1,0 +1,124 @@
+"""Building-block layers: norms, MLPs, embeddings, rotary — pure functions
+over plain dict params.  Weights live in f32 (master); forward casts to the
+config compute dtype.  Sharding is annotated with logical axes."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import shard
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def normal(key, shape, scale, logical=None):
+    w = jax.random.normal(key, shape, dtype=jnp.float32) * scale
+    return w
+
+
+def fan_in_init(key, shape, logical=None):
+    import math
+    return normal(key, shape, 1.0 / math.sqrt(shape[0]), logical)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_norm(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+# --------------------------------------------------------------------------
+# linear / mlp
+# --------------------------------------------------------------------------
+
+def linear(x, w, b=None):
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def init_linear(key, d_in, d_out, bias=False, logical=("p_embed", "p_mlp")):
+    p = {"w": fan_in_init(key, (d_in, d_out), logical)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def glu_mlp(x, p, act: str):
+    """SwiGLU / GeGLU: act(x @ w_gate) * (x @ w_up) @ w_down.
+    Accepts [B, S, d] or flattened [N, d] (MoE shared-expert path)."""
+    g = linear(x, p["gate"]["w"])
+    u = linear(x, p["up"]["w"])
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    logical = ("batch",) + ("seq",) * (x.ndim - 2) + ("mlp",)
+    h = shard(g * u, logical)
+    return linear(h, p["down"]["w"])
+
+
+def init_glu_mlp(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d_model, d_ff, logical=("p_embed", "p_mlp")),
+        "up": init_linear(k2, d_model, d_ff, logical=("p_embed", "p_mlp")),
+        "down": init_linear(k3, d_ff, d_model, logical=("p_mlp", "p_embed")),
+    }
+
+
+# --------------------------------------------------------------------------
+# embeddings
+# --------------------------------------------------------------------------
+
+def embed(tokens, table, dtype):
+    out = jnp.take(table, tokens, axis=0).astype(dtype)
+    return shard(out, ("batch", "seq_res", "embed"))
+
+
+def unembed(x, table):
+    """Logits projection against the [vocab, d_model] table (tied or untied);
+    returns f32 logits sharded over vocab."""
+    logits = x.astype(jnp.float32) @ table.astype(jnp.float32).T
+    return shard(logits, ("batch", "seq", "vocab"))
+
+
+def init_embed(key, vocab, d_model):
+    # std 1/sqrt(d): with tied unembedding, final-norm activations (RMS~1)
+    # against this table give logits ~ N(0, 1) at init (CE starts near ln V).
+    return {"table": normal(key, (vocab, d_model), d_model ** -0.5,
+                            ("p_vocab", "p_embed"))}
+
+
+# --------------------------------------------------------------------------
+# rotary
+# --------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """Apply rotary embedding.  x: [B, S, H, D], positions: [B, S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.exp(-jnp.log(theta) *
+                   jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,218 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD algorithm: within a chunk the recurrence is computed as a
+[Q, Q] masked-decay matmul (quadratic *inside* the chunk only — MXU-shaped);
+across chunks a scan carries the [heads, d_state, head_dim] state.  A decode
+step is the bare recurrence (O(1) per token) plus a rolling conv window —
+this bounded state is why the SSM/hybrid archs own the long_500k shape.
+
+Layout: d_inner = expand·d_model = n_ssm_heads·headdim; B/C are shared
+across heads within each of `ngroups` groups (we use ngroups=1 per config).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.parallel import shard
+
+
+def init_ssm(key, cfg):
+    d = cfg.d_model
+    di = cfg.d_inner_ssm
+    nh, st, g = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_ngroups
+    conv_dim = di + 2 * g * st
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    import math
+    return {
+        # z, x, B, C, dt in one fused projection
+        "in_proj": {"w": layers.normal(
+            k1, (d, 2 * di + 2 * g * st + nh), 1.0 / math.sqrt(d))},
+        "conv": {"w": layers.normal(k2, (cfg.ssm_conv, conv_dim), 0.1),
+                 "b": jnp.zeros((conv_dim,), jnp.float32)},
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "gate_norm": layers.init_rms_norm(di),
+        "out_proj": {"w": layers.normal(k3, (di, d), 1.0 / math.sqrt(di))},
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di = cfg.d_inner_ssm
+    g, st, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :di]
+    xin = zxbcdt[..., di:2 * di]
+    b = zxbcdt[..., 2 * di:2 * di + g * st]
+    c = zxbcdt[..., 2 * di + g * st:2 * di + 2 * g * st]
+    dt = zxbcdt[..., 2 * di + 2 * g * st:]
+    return z, xin, b, c, dt
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv along seq.  x: [B, S, C], w: [W, C].
+    With `cache` [B, W-1, C]: continue from rolling state (decode)."""
+    win = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], win - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+              for i in range(win))
+    out = out + b.astype(x.dtype)
+    new_cache = xp[:, -(win - 1):, :] if win > 1 else None
+    return jax.nn.silu(out), new_cache
+
+
+def ssd_forward(x, p, cfg, chunk: int = 128):
+    """Chunked SSD over a full sequence.  x: [B, S, d] → [B, S, d]."""
+    y, _, _ = _ssd_core(x, p, cfg, chunk, want_state=False)
+    return y
+
+
+def ssd_prefill(x, p, cfg, chunk: int = 128):
+    """Like ssd_forward but also returns (final_state [B,nh,st,hd],
+    conv_cache [B,W-1,conv_dim]) to prime decoding."""
+    return _ssd_core(x, p, cfg, chunk, want_state=True)
+
+
+def _ssd_core(x, p, cfg, chunk: int, want_state: bool):
+    bsz, s, _ = x.shape
+    nh, hd, st, g = (cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state,
+                     cfg.ssm_ngroups)
+    di = cfg.d_inner_ssm
+
+    zxbcdt = layers.linear(x, p["in_proj"]["w"])
+    z, xin, bb, cc, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, bb, cc], axis=-1)
+    conv_cache = conv_in[:, -(cfg.ssm_conv - 1):, :].astype(jnp.float32) \
+        if want_state else None
+    conv_out, _ = _causal_conv(conv_in, p["conv"]["w"], p["conv"]["b"])
+    xin = conv_out[..., :di]
+    bb = conv_out[..., di:di + g * st]
+    cc = conv_out[..., di + g * st:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"][None, None])            # [B,S,nh]
+    a = -jnp.exp(p["a_log"])                                    # [nh] < 0
+    la = dt * a[None, None]                                     # log-decay
+
+    xh = xin.reshape(bsz, s, nh, hd).astype(jnp.float32)
+    bg = bb.reshape(bsz, s, g, st).astype(jnp.float32)
+    cg = cc.reshape(bsz, s, g, st).astype(jnp.float32)
+    hpg = nh // g
+    # broadcast groups over their heads
+    bh = jnp.repeat(bg, hpg, axis=2)                            # [B,S,nh,st]
+    ch = jnp.repeat(cg, hpg, axis=2)
+
+    # pad to chunk multiple
+    q = chunk
+    nc = -(-s // q)
+    pad = nc * q - s
+
+    def padz(t):
+        return jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+
+    xh, bh, ch, la, dtp = map(padz, (xh, bh, ch, la, dt))
+    xc = xh.reshape(bsz, nc, q, nh, hd)
+    bc = bh.reshape(bsz, nc, q, nh, st)
+    cx = ch.reshape(bsz, nc, q, nh, st)
+    lac = la.reshape(bsz, nc, q, nh)
+    dtc = dtp.reshape(bsz, nc, q, nh)
+
+    # scan over chunks: intra-chunk quadratic matmuls + state carry.
+    ii = jnp.arange(q)
+    causal = (ii[:, None] >= ii[None, :])[None, :, :, None]     # [1,Q,Q,1]
+
+    def chunk_step(state, xs):
+        xi, bi, ci, lai, dti = xs           # [B,Q,nh,(hd|st)] / [B,Q,nh]
+        cum = jnp.cumsum(lai, axis=1)                           # [B,Q,nh]
+        # intra-chunk: decay(i,j) = exp(cum_i - cum_j), j <= i
+        dec = cum[:, :, None, :] - cum[:, None, :, :]           # [B,Q,Q,nh]
+        # mask BEFORE exp: for j > i, dec > 0 can overflow to +inf; masking
+        # after exp leaves `0 * inf = NaN` in the where-VJP.
+        l_mat = jnp.exp(jnp.where(causal, dec, -jnp.inf))
+        gmat = jnp.einsum("bihs,bjhs->bijh", ci, bi)            # C_i · B_j
+        wmat = gmat * l_mat * dti[:, None, :, :]
+        y_intra = jnp.einsum("bijh,bjhd->bihd", wmat, xi)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bqhs,bhsd->bqhd",
+                             ci * jnp.exp(cum)[..., None], state)
+        # state update to the end of this chunk
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)            # [B,Q,nh]
+        sgrow = jnp.einsum("bqhs,bqh,bqhd->bhsd",
+                           bi, decay_to_end * dti, xi)
+        new_state = state * jnp.exp(cum[:, -1, :])[..., None, None] + sgrow
+        return new_state, y_intra + y_inter
+
+    s0 = jnp.zeros((bsz, nh, st, hd), jnp.float32)
+    final_state, ys = jax.lax.scan(
+        chunk_step, s0,
+        (xc.transpose(1, 0, 2, 3, 4), bc.transpose(1, 0, 2, 3, 4),
+         cx.transpose(1, 0, 2, 3, 4), lac.transpose(1, 0, 2, 3),
+         dtc.transpose(1, 0, 2, 3)))                            # [nc,B,Q,h,hd]
+
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, nc * q, nh, hd)[:, :s]
+    y = y + xh[:, :s].reshape(bsz, s, nh, hd) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+
+    # gated RMSNorm then output projection
+    y = layers.rms_norm(y * jax.nn.silu(z), p["gate_norm"]["scale"],
+                        cfg.norm_eps)
+    out = layers.linear(y, p["out_proj"]["w"])
+    return out, final_state, conv_cache
+
+
+# --------------------------------------------------------------------------
+# decode (recurrent) path
+# --------------------------------------------------------------------------
+
+def init_ssm_cache(cfg, batch, n_layers, dtype=jnp.float32):
+    di = cfg.d_inner_ssm
+    conv_dim = di + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "state": jnp.zeros((n_layers, batch, cfg.n_ssm_heads, cfg.ssm_state,
+                            cfg.ssm_headdim), dtype),
+        "conv": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_dim),
+                          dtype),
+    }
+
+
+def ssd_decode_step(x, p, cfg, state, conv_cache):
+    """One-token recurrence.  x: [B, 1, d]; state: [B, nh, st, hd];
+    conv_cache: [B, W-1, conv_dim].  Returns (y [B,1,d], state, conv_cache).
+    """
+    bsz = x.shape[0]
+    nh, hd, st, g = (cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state,
+                     cfg.ssm_ngroups)
+    di = cfg.d_inner_ssm
+
+    zxbcdt = layers.linear(x, p["in_proj"]["w"])
+    z, xin, bb, cc, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, bb, cc], axis=-1)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv"]["w"], p["conv"]["b"],
+                                      cache=conv_cache)
+    xin = conv_out[..., :di]
+    bb = conv_out[..., di:di + g * st]
+    cc = conv_out[..., di + g * st:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # [B,nh]
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a[None])                               # [B,nh]
+
+    xh = xin.reshape(bsz, nh, hd).astype(jnp.float32)
+    hpg = nh // g
+    bh = jnp.repeat(bb.reshape(bsz, g, st), hpg, axis=1)        # [B,nh,st]
+    ch = jnp.repeat(cc.reshape(bsz, g, st), hpg, axis=1)
+
+    state = (state * decay[..., None, None]
+             + jnp.einsum("bhs,bh,bhd->bhsd", bh, dt, xh))
+    y = jnp.einsum("bhs,bhsd->bhd", ch, state)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), p["gate_norm"]["scale"],
+                        cfg.norm_eps)
+    return layers.linear(y, p["out_proj"]["w"]), state, new_conv

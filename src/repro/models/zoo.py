@@ -1,0 +1,70 @@
+"""Model zoo: one uniform functional interface over all families.
+
+  model = zoo.build(cfg)
+  params = model.init(key)
+  logits, aux = model.forward(params, tokens, memory=...)
+  cache = model.init_cache(batch, max_len)
+  logits, cache = model.prefill(params, tokens, cache, memory=...)
+  logits, cache = model.decode_step(params, cache, tokens)
+
+`memory` is the stubbed modality frontend output ([B, T_frontend, d_model])
+for the audio/vlm families; None elsewhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.models import encdec, hybrid, transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    config: ModelConfig
+    init: Callable
+    forward: Callable          # (params, tokens, memory=None) -> (logits, aux)
+    init_cache: Callable       # (batch, max_len, dtype=...) -> cache
+    prefill: Callable          # (params, tokens, cache, memory=None)
+    decode_step: Callable      # (params, cache, tokens) -> (logits, cache)
+    needs_memory: bool = False
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return Model(
+            config=cfg,
+            init=lambda key: transformer.init_lm(key, cfg),
+            forward=lambda p, t, memory=None: transformer.forward(
+                p, cfg, t, memory=memory),
+            init_cache=lambda b, ml, dtype=jnp.bfloat16: transformer.init_cache(
+                cfg, b, ml, dtype),
+            prefill=lambda p, t, c, memory=None: transformer.prefill(
+                p, cfg, t, c, memory=memory),
+            decode_step=lambda p, c, t: transformer.decode_step(p, cfg, c, t),
+            needs_memory=cfg.family == "vlm")
+    if cfg.family in ("ssm", "hybrid"):
+        return Model(
+            config=cfg,
+            init=lambda key: hybrid.init_lm(key, cfg),
+            forward=lambda p, t, memory=None: hybrid.forward(p, cfg, t),
+            init_cache=lambda b, ml, dtype=jnp.bfloat16: hybrid.init_cache(
+                cfg, b, ml, dtype),
+            prefill=lambda p, t, c, memory=None: hybrid.prefill(p, cfg, t, c),
+            decode_step=lambda p, c, t: hybrid.decode_step(p, cfg, c, t))
+    if cfg.family in ("encdec", "audio"):
+        return Model(
+            config=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            forward=lambda p, t, memory=None: encdec.forward(
+                p, cfg, t, memory=memory),
+            init_cache=lambda b, ml, dtype=jnp.bfloat16: encdec.init_cache(
+                cfg, b, ml, dtype),
+            prefill=lambda p, t, c, memory=None: encdec.prefill(
+                p, cfg, t, c, memory=memory),
+            decode_step=lambda p, c, t: encdec.decode_step(p, cfg, c, t),
+            needs_memory=True)
+    raise ValueError(f"unknown family {cfg.family!r}")

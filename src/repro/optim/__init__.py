@@ -1,0 +1,6 @@
+"""Optimizer substrate (pure-JAX AdamW + schedules + clipping +
+error-feedback gradient compression)."""
+
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, adamw_init, adamw_update, clip_by_global_norm,
+    cosine_schedule)

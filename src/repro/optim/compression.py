@@ -1,0 +1,67 @@
+"""Int8 error-feedback gradient compression for the slow (cross-pod) axis.
+
+At 2+ pods the gradient all-reduce crosses DCN-class links; quantizing the
+cross-pod reduction 4× (f32 → int8 + per-tensor scale) cuts that traffic
+while error feedback keeps the *accumulated* quantization error in the
+update path (Seide et al. 2014; 1-bit Adam lineage).
+
+Usage (pure pytree functions — the launcher owns the residual state):
+
+    residual = ef_init(grads_template)
+    grads_q, residual = compress_grads(grads + residual)   # before psum
+    ... psum over "pod" ...
+    grads = decompress(grads_q)
+
+`simulate_roundtrip` applies compress→decompress locally; tests use it to
+assert the error-feedback convergence property (quantization error does not
+accumulate over steps).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ef_init(grads):
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def _q8(x):
+    """Symmetric per-tensor int8 quantization: (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dq8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, residual):
+    """(q_tree, scales_tree, new_residual): error feedback folds the
+    quantization error of THIS step into the next step's gradient."""
+    def one(g, r):
+        v = g.astype(jnp.float32) + r
+        q, s = _q8(v)
+        err = v - _dq8(q, s)
+        return (q, s), err
+    flat_g, tree = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    qs, errs = zip(*(one(g, r) for g, r in zip(flat_g, flat_r)))
+    q_tree = tree.unflatten([q for q, _ in qs])
+    s_tree = tree.unflatten([s for _, s in qs])
+    r_tree = tree.unflatten(list(errs))
+    return q_tree, s_tree, r_tree
+
+
+def decompress_grads(q_tree, s_tree):
+    return jax.tree.map(_dq8, q_tree, s_tree)
+
+
+def simulate_roundtrip(grads, residual):
+    """Local compress→decompress (what each pod sees after the quantized
+    cross-pod reduction, modulo the mean)."""
+    q, s, r = compress_grads(grads, residual)
+    return decompress_grads(q, s), r

@@ -1,0 +1,5 @@
+"""Parallelism substrate: logical-axis sharding rules + mesh context."""
+
+from repro.parallel.sharding import (  # noqa: F401
+    MeshContext, current_context, set_context, shard, sharding_for,
+    DEFAULT_RULES, spec_for)

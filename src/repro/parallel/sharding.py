@@ -1,0 +1,137 @@
+"""Divisibility-aware logical-axis sharding (MaxText-style rules).
+
+Model code annotates tensors with *logical* axis names
+(``shard(x, ("batch", "seq", "embed"))``); the rules map logical names to
+mesh axes; a rule is dropped per-tensor when the dimension is not divisible
+by the mesh-axis size (e.g. yi-34b's 56 query heads on a 16-way "model"
+axis), in which case XLA's SPMD partitioner inserts the reshard at the
+nearest divisible boundary instead of us forcing a bad constraint.
+
+The mesh context is process-global and set by the launcher (or a test); all
+model code degrades to no-ops without one, so single-device smoke tests see
+plain jnp.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (tried in order; tuple entries shard together)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": (),                 # sequence kept unsharded by default
+    "seq_res": (),             # residual-stream seq dim; launcher remaps to
+                               # ("model",) for Megatron-style seq parallelism
+    "seq_sp": ("model",),      # sequence-parallel variant (long-context)
+    "embed": (),               # activation d_model unsharded
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "kv_seq": ("model",),      # sequence-sharded KV cache (decode SP)
+    # parameters (2-D sharded: TP on one dim, FSDP on the other)
+    "p_embed": ("data",),      # FSDP axis for weights' d_model dim
+    "p_vocab": ("model",),
+    "p_mlp": ("model",),
+    "p_heads": ("model",),
+    "p_experts": ("model",),
+    "p_state": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    mesh: Mesh
+    rules: Mapping[str, tuple[str, ...]]
+
+    def axis_size(self, names: tuple[str, ...]) -> int:
+        n = 1
+        for a in names:
+            n *= self.mesh.shape[a]
+        return n
+
+
+_CTX: list[MeshContext | None] = [None]
+_MANUAL: list[bool] = [False]
+
+
+class manual_mode:
+    """Context manager: inside shard_map bodies, mesh axes are manual and
+    with_sharding_constraint is illegal — `shard()` becomes a no-op."""
+
+    def __enter__(self):
+        self._old = _MANUAL[0]
+        _MANUAL[0] = True
+
+    def __exit__(self, *exc):
+        _MANUAL[0] = self._old
+        return False
+
+
+def set_context(mesh: Mesh | None,
+                rules: Mapping[str, tuple[str, ...]] | None = None) -> None:
+    _CTX[0] = None if mesh is None else MeshContext(
+        mesh, dict(rules or DEFAULT_RULES))
+
+
+def current_context() -> MeshContext | None:
+    return _CTX[0]
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[str | None],
+             ctx: MeshContext) -> P:
+    """PartitionSpec from logical axes, dropping non-divisible rules."""
+    assert len(shape) == len(logical), (shape, logical)
+    parts = []
+    used: set[str] = set()
+    for dim, name in zip(shape, logical):
+        if name is None:
+            parts.append(None)
+            continue
+        axes = tuple(a for a in ctx.rules.get(name, ())
+                     if a in ctx.mesh.shape and a not in used)
+        size = 1
+        for a in axes:
+            size *= ctx.mesh.shape[a]
+        if not axes or size == 1 or dim % size != 0:
+            # try a prefix that divides (e.g. ("pod","data") -> ("pod",))
+            ok: tuple[str, ...] = ()
+            acc = 1
+            for a in axes:
+                if dim % (acc * ctx.mesh.shape[a]) == 0:
+                    acc *= ctx.mesh.shape[a]
+                    ok = ok + (a,)
+                else:
+                    break
+            axes = ok
+        if not axes:
+            parts.append(None)
+        else:
+            used.update(axes)
+            parts.append(axes if len(axes) > 1 else axes[0])
+    return P(*parts)
+
+
+def sharding_for(shape: Sequence[int], logical: Sequence[str | None],
+                 ctx: MeshContext | None = None) -> NamedSharding | None:
+    ctx = ctx or current_context()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, spec_for(shape, logical, ctx))
+
+
+def shard(x: jax.Array, logical: Sequence[str | None]) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op without a mesh or
+    inside a shard_map body)."""
+    ctx = current_context()
+    if ctx is None or _MANUAL[0]:
+        return x
+    s = sharding_for(x.shape, logical, ctx)
+    return jax.lax.with_sharding_constraint(x, s)

@@ -1,0 +1,2 @@
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    StragglerMonitor, RestartableLoop, elastic_restore)

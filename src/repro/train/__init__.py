@@ -1,0 +1,5 @@
+"""Training loop substrate: loss, train_step/serve_step builders."""
+
+from repro.train.steps import (  # noqa: F401
+    cross_entropy_loss, make_train_step, make_prefill_step, make_decode_step,
+    TrainState, init_train_state)

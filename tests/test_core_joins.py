@@ -1,0 +1,227 @@
+"""Core join engine vs python oracles (sorted path + bucketed path)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (Relation, binary_join, cyclic3, driver, linear3,
+                        star3)
+from conftest import (make_rel, oracle_cyclic3_count, oracle_linear3_count,
+                      oracle_linear3_per_r, oracle_pair_count)
+
+
+# --------------------------------------------------------------------------
+# sorted-path binary join
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n_a=st.integers(1, 200), n_b=st.integers(1, 200),
+       d=st.integers(1, 100), seed=st.integers(0, 2**31 - 1))
+def test_join_count_matches_oracle(n_a, n_b, d, seed):
+    rng = np.random.default_rng(seed)
+    a, ad = make_rel(rng, n_a, ("b",), d, cap_extra=seed % 5)
+    b, bd = make_rel(rng, n_b, ("b",), d)
+    got = int(binary_join.join_count(a, "b", b, "b"))
+    assert got == oracle_pair_count(ad["b"], bd["b"])
+
+
+@settings(max_examples=15, deadline=None)
+@given(n_a=st.integers(1, 100), n_b=st.integers(1, 100),
+       d=st.integers(1, 40), seed=st.integers(0, 2**31 - 1))
+def test_join_materialize_matches_oracle(n_a, n_b, d, seed):
+    rng = np.random.default_rng(seed)
+    a, ad = make_rel(rng, n_a, ("a", "b"), d)
+    b, bd = make_rel(rng, n_b, ("b", "c"), d)
+    expect = oracle_pair_count(ad["b"], bd["b"])
+    res = binary_join.join_materialize(a, "b", b, "b", out_capacity=expect + 16,
+                                       build_prefix="l_", probe_prefix="r_")
+    assert int(res.total) == expect
+    assert not bool(res.overflowed)
+    # every emitted pair actually joins
+    lb = np.asarray(res.rel.col("l_b"))
+    rb = np.asarray(res.rel.col("r_b"))
+    v = np.asarray(res.rel.valid)
+    assert int(v.sum()) == expect
+    np.testing.assert_array_equal(lb[v], rb[v])
+    # multiset of (l_a, r_c) matches the oracle join
+    from collections import Counter, defaultdict
+    want = Counter()
+    by_b = defaultdict(list)
+    for bb, cc in zip(bd["b"], bd["c"]):
+        by_b[bb].append(cc)
+    for aa, bb in zip(ad["a"], ad["b"]):
+        for cc in by_b.get(bb, ()):
+            want[(int(aa), int(cc))] += 1
+    la = np.asarray(res.rel.col("l_a"))
+    rc = np.asarray(res.rel.col("r_c"))
+    got = Counter(zip(la[v].tolist(), rc[v].tolist()))
+    assert got == want
+
+
+def test_join_materialize_overflow_flag(rng):
+    a, _ = make_rel(rng, 50, ("b",), 2)
+    b, _ = make_rel(rng, 50, ("b",), 2)
+    res = binary_join.join_materialize(a, "b", b, "b", out_capacity=8)
+    assert bool(res.overflowed)
+    assert int(res.total) > 8
+    # valid entries are still correct joins, just truncated
+    assert int(np.asarray(res.rel.valid).sum()) == 8
+
+
+def test_bucketed_pair_count(rng):
+    a, ad = make_rel(rng, 500, ("b",), 97)
+    b, bd = make_rel(rng, 300, ("b",), 97)
+    got, ovf = binary_join.bucketed_join_count(
+        a, "b", b, "b", n_buckets=16, build_cap=128, probe_cap=128)
+    assert not bool(ovf)
+    assert int(got) == oracle_pair_count(ad["b"], bd["b"])
+
+
+# --------------------------------------------------------------------------
+# cascaded binary baseline
+# --------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 60))
+def test_cascade_count_matches_oracle(seed, d):
+    rng = np.random.default_rng(seed)
+    r, rd = make_rel(rng, 120, ("a", "b"), d)
+    s, sd = make_rel(rng, 150, ("b", "c"), d)
+    t, td = make_rel(rng, 130, ("c", "d"), d)
+    expect = oracle_linear3_count(rd["b"], sd["b"], sd["c"], td["c"])
+    inter = oracle_pair_count(rd["b"], sd["b"])
+    res = binary_join.cascaded_binary_count(r, s, t,
+                                            intermediate_capacity=inter + 32)
+    assert int(res.count) == expect
+    assert int(res.intermediate_total) == inter
+    assert not bool(res.intermediate_overflowed)
+
+
+def test_cascade_per_r_counts(rng):
+    r, rd = make_rel(rng, 80, ("a", "b"), 30)
+    s, sd = make_rel(rng, 90, ("b", "c"), 30)
+    t, td = make_rel(rng, 70, ("c", "d"), 30)
+    got = np.asarray(binary_join.cascaded_binary_per_r_counts(r, s, t))[:80]
+    want = oracle_linear3_per_r(rd["b"], sd["b"], sd["c"], td["c"])
+    np.testing.assert_array_equal(got, want)
+
+
+# --------------------------------------------------------------------------
+# linear 3-way (Algorithm 1)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(3, 80),
+       u=st.sampled_from([2, 4, 8]))
+def test_linear3_count_matches_oracle(seed, d, u):
+    rng = np.random.default_rng(seed)
+    r, rd = make_rel(rng, 150, ("a", "b"), d)
+    s, sd = make_rel(rng, 180, ("b", "c"), d)
+    t, td = make_rel(rng, 160, ("c", "d"), d)
+    expect = oracle_linear3_count(rd["b"], sd["b"], sd["c"], td["c"])
+    plan = linear3.default_plan(150, 180, 160, m_budget=64, u=u)
+    res, _ = driver.linear3_count_auto(r, s, t, plan)
+    assert int(res.count) == expect
+
+
+def test_linear3_per_r_matches_oracle(rng):
+    r, rd = make_rel(rng, 100, ("a", "b"), 40)
+    s, sd = make_rel(rng, 120, ("b", "c"), 40)
+    t, td = make_rel(rng, 110, ("c", "d"), 40)
+    plan = linear3.default_plan(100, 120, 110, m_budget=48, u=4)
+    (keys, counts, valid), _ = driver.linear3_per_r_counts_auto(r, s, t, plan)
+    # group by a on both sides
+    from collections import defaultdict
+    want = defaultdict(int)
+    per_r = oracle_linear3_per_r(rd["b"], sd["b"], sd["c"], td["c"])
+    for a, c in zip(rd["a"], per_r):
+        want[int(a)] += int(c)
+    got = defaultdict(int)
+    k = np.asarray(keys).ravel()
+    c = np.asarray(counts).ravel()
+    v = np.asarray(valid).ravel()
+    for ki, ci, vi in zip(k, c, v):
+        if vi:
+            got[int(ki)] += int(ci)
+    assert dict(got) == dict(want)
+
+
+def test_linear3_zipf_skew_auto_recovers(rng):
+    """Zipf-skewed keys overflow the uniform plan; the driver recovers and
+    stays exact (paper §1.2 skew note)."""
+    r, rd = make_rel(rng, 200, ("a", "b"), 50, zipf=1.4)
+    s, sd = make_rel(rng, 220, ("b", "c"), 50, zipf=1.4)
+    t, td = make_rel(rng, 210, ("c", "d"), 50, zipf=1.4)
+    expect = oracle_linear3_count(rd["b"], sd["b"], sd["c"], td["c"])
+    plan = linear3.default_plan(200, 220, 210, m_budget=64, u=4, slack=1.5)
+    res, grown = driver.linear3_count_auto(r, s, t, plan)
+    assert int(res.count) == expect
+
+
+def test_linear3_tuples_read_matches_cost_model(rng):
+    from repro.core import cost_model
+    r, _ = make_rel(rng, 128, ("a", "b"), 40)
+    s, _ = make_rel(rng, 128, ("b", "c"), 40)
+    t, _ = make_rel(rng, 128, ("c", "d"), 40)
+    plan = linear3.default_plan(128, 128, 128, m_budget=32, u=4)
+    res, _ = driver.linear3_count_auto(r, s, t, plan)
+    # realized tuples == |R| + |S| + h_parts * |T|, h_parts = ceil(|R|/M)
+    assert int(res.tuples_read) == 128 + 128 + plan.h_parts * 128
+    # and the cost model's continuous form agrees within the ceil rounding
+    cm = cost_model.linear3_tuples(128, 128, 128, m=32)
+    assert abs(int(res.tuples_read) - cm) / cm < 0.35
+
+
+# --------------------------------------------------------------------------
+# cyclic 3-way (triangles)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(3, 60),
+       grid=st.sampled_from([(2, 2), (4, 2), (4, 4)]))
+def test_cyclic3_count_matches_oracle(seed, d, grid):
+    rng = np.random.default_rng(seed)
+    uh, ug = grid
+    r, rd = make_rel(rng, 140, ("a", "b"), d)
+    s, sd = make_rel(rng, 150, ("b", "c"), d)
+    t, td = make_rel(rng, 130, ("c", "a"), d)
+    expect = oracle_cyclic3_count(rd["a"], rd["b"], sd["b"], sd["c"],
+                                  td["c"], td["a"])
+    plan = cyclic3.default_plan(140, 150, 130, m_budget=64, uh=uh, ug=ug)
+    res, _ = driver.cyclic3_count_auto(r, s, t, plan)
+    assert int(res.count) == expect
+
+
+def test_cyclic3_self_join_triangles(rng):
+    """Triangle counting on a random graph: R = S = T = edge list."""
+    n_edges, n_nodes = 240, 40
+    e, ed = make_rel(rng, n_edges, ("a", "b"), n_nodes)
+    s = Relation.from_arrays(b=ed["a"], c=ed["b"])
+    t = Relation.from_arrays(c=ed["a"], a=ed["b"])
+    expect = oracle_cyclic3_count(ed["a"], ed["b"], ed["a"], ed["b"],
+                                  ed["a"], ed["b"])
+    plan = cyclic3.default_plan(n_edges, n_edges, n_edges, m_budget=96,
+                                uh=4, ug=4)
+    res, _ = driver.cyclic3_count_auto(e, s, t, plan)
+    assert int(res.count) == expect
+
+
+# --------------------------------------------------------------------------
+# star 3-way
+# --------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(3, 60),
+       chunks=st.sampled_from([1, 2, 4]))
+def test_star3_count_matches_oracle(seed, d, chunks):
+    rng = np.random.default_rng(seed)
+    r, rd = make_rel(rng, 60, ("a", "b"), d)      # small dimension
+    s, sd = make_rel(rng, 400, ("b", "c"), d)     # big fact
+    t, td = make_rel(rng, 70, ("c", "d"), d)      # small dimension
+    expect = oracle_linear3_count(rd["b"], sd["b"], sd["c"], td["c"])
+    plan = star3.default_plan(60, 400, 70, uh=4, ug=4, chunks=chunks)
+    res, _ = driver.star3_count_auto(r, s, t, plan)
+    assert int(res.count) == expect
+    assert int(res.tuples_read) == 60 + 400 + 70  # every tuple read once

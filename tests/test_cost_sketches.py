@@ -1,0 +1,135 @@
+"""Cost model (paper §4.2/§5.2 closed forms + Examples 3/4) and FM sketch."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import cost_model, sketches
+
+
+# --------------------------------------------------------------------------
+# cost model: the paper's own numbers
+# --------------------------------------------------------------------------
+
+def test_example3_threshold():
+    """Example 3: linear 3-way beats the cascade's intermediate for the
+    Facebook relation when M > ~1.003e9 tuples."""
+    m = cost_model.example3_threshold_m(6e11)
+    assert 1.0e9 < m < 1.01e9
+    # at that M the traffic matches the cascade's intermediate bound
+    t3 = cost_model.linear3_tuples(6e11, 6e11, 6e11, m)
+    assert abs(t3 - 3.6e14) / 3.6e14 < 1e-6
+
+
+def test_example4_threshold():
+    """Example 4: cyclic 3-way needs only ~7e6 tuples of on-chip memory.
+
+    Note: the paper's Example 4 uses n(1 + √(n/M)) — dropping the factor 2
+    from its own §5.2 closed form |R| + 2√(|R||S||T|/M).  We validate the
+    example's threshold with the example's expression (reproducing the
+    "seven million tuples" claim) and separately check that the §5.2 form
+    at that M is exactly 2× the example's second term.
+    """
+    m = cost_model.example4_threshold_m(6e11, 1.8e14)
+    assert 6e6 < m < 8e6
+    n = 6e11
+    example_form = n * (1.0 + (n / m) ** 0.5)
+    assert abs(example_form - 1.8e14) / 1.8e14 < 1e-6
+    closed = cost_model.cyclic3_tuples(n, n, n, m)
+    assert abs((closed - n) - 2.0 * (example_form - n)) / closed < 1e-6
+
+
+def test_cyclic_optimal_h_minimizes():
+    n_r, n_s, n_t, m = 1e8, 3e8, 2e8, 1e6
+    h_star = cost_model.cyclic3_optimal_h(n_r, n_s, n_t, m)
+    best = cost_model.cyclic3_tuples(n_r, n_s, n_t, m, h=h_star)
+    for h in (h_star * 0.5, h_star * 0.9, h_star * 1.1, h_star * 2.0):
+        assert cost_model.cyclic3_tuples(n_r, n_s, n_t, m, h=h) >= best - 1e-6
+    # closed form at the optimum
+    closed = cost_model.cyclic3_tuples(n_r, n_s, n_t, m)
+    assert abs(best - closed) / closed < 1e-9
+
+
+def test_linear_strategy_flips_with_d():
+    """Low d (big intermediate) favors 3-way; high d favors the cascade."""
+    n, m = 2e8, 16e6 / 8  # 16MB scratchpad, 8B tuples
+    lo = cost_model.choose_linear_strategy(n, n, n, m, d=7e5)
+    hi = cost_model.choose_linear_strategy(n, n, n, m, d=1e9)
+    assert lo.strategy == "linear3"
+    assert hi.strategy == "cascade"
+    assert lo.speed_ratio > 1 > hi.speed_ratio
+
+
+def test_symmetry_prefers_small_r():
+    """§4.2: reading R once means the smaller of R,T should be R."""
+    small, big, m = 1e6, 1e9, 1e6
+    a = cost_model.linear3_tuples(small, 1e7, big, m)
+    b = cost_model.linear3_tuples(big, 1e7, small, m)
+    assert a < b
+
+
+# --------------------------------------------------------------------------
+# FM sketch
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("true_distinct", [100, 5000, 200_000])
+def test_fm_estimate_accuracy(true_distinct):
+    keys = jnp.arange(true_distinct, dtype=jnp.int32) * 7919 + 13
+    regs = sketches.add(sketches.empty(64), keys,
+                        jnp.ones((true_distinct,), bool))
+    est = float(sketches.fm_estimate(regs))
+    assert 0.5 * true_distinct < est < 2.0 * true_distinct
+
+
+def test_fm_merge_equals_union():
+    a_keys = jnp.arange(0, 3000, dtype=jnp.int32)
+    b_keys = jnp.arange(1500, 4000, dtype=jnp.int32)
+    ra = sketches.add(sketches.empty(32), a_keys, jnp.ones((3000,), bool))
+    rb = sketches.add(sketches.empty(32), b_keys, jnp.ones((2500,), bool))
+    merged = sketches.merge(ra, rb)
+    union = sketches.add(sketches.empty(32), jnp.arange(0, 4000, dtype=jnp.int32),
+                         jnp.ones((4000,), bool))
+    np.testing.assert_array_equal(np.asarray(merged), np.asarray(union))
+
+
+def test_fm_invalid_rows_ignored():
+    keys = jnp.arange(1000, dtype=jnp.int32)
+    none = sketches.add(sketches.empty(16), keys, jnp.zeros((1000,), bool))
+    np.testing.assert_array_equal(np.asarray(none), 0)
+
+
+def test_linear3_fm_distinct_close_to_truth(rng):
+    from conftest import make_rel, oracle_distinct_join_pairs
+    from repro.core import linear3
+    r, rd = make_rel(rng, 150, ("a", "b"), 60)
+    s, sd = make_rel(rng, 160, ("b", "c"), 60)
+    t, td = make_rel(rng, 140, ("c", "d"), 60)
+    truth = oracle_distinct_join_pairs(rd["b"], rd["a"], sd["b"], sd["c"],
+                                       td["c"], td["d"])
+    plan = linear3.default_plan(150, 160, 140, m_budget=64, u=4, slack=6.0)
+    regs, ovf = linear3.linear3_fm_distinct(r, s, t, plan, n_registers=64)
+    assert not bool(ovf)
+    est = float(sketches.fm_estimate(regs))
+    assert 0.4 * truth < est < 2.5 * truth, (est, truth)
+
+
+# --------------------------------------------------------------------------
+# planner: time-based decisions on hardware profiles
+# --------------------------------------------------------------------------
+
+def test_planner_timed_decisions():
+    from repro.core import planner
+    from repro.perfmodel import PLASTICINE, TPU_V5E
+    # the paper's flagship point: 3-way wins big on Plasticine (SSD cliff)
+    c = planner.choose_linear_timed(2e8, 2e8, 2e8, 7e5, PLASTICINE)
+    assert c.strategy == "3way" and c.speedup > 20
+    # on v5e the fast host link narrows the win but keeps the 3-way ahead
+    v = planner.choose_linear_timed(2e8, 2e8, 2e8, 7e5, TPU_V5E)
+    assert v.strategy == "3way" and 1.0 < v.speedup < c.speedup
+    # high-d small-N regime: the cascade wins (paper's conclusion)
+    w = planner.choose_linear_timed(3e7, 3e7, 3e7, 3e7 / 5, PLASTICINE)
+    assert w.strategy == "cascade"
+    # star join at duplicate factor 5: ~11x (Fig 4h)
+    s = planner.choose_star_timed(1e6, 1e9, 1e6, 2e5, PLASTICINE)
+    assert s.strategy == "3way" and 8 < s.speedup < 15

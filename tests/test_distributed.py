@@ -1,0 +1,20 @@
+"""Distributed joins on an 8-fake-device mesh (subprocess: the
+--xla_force_host_platform_device_count flag must not leak into this
+process, which the rest of the suite expects to see 1 device)."""
+
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+
+@pytest.mark.slow
+def test_distributed_joins_exact():
+    proc = subprocess.run(
+        [sys.executable, str(HERE / "dist_runner.py")],
+        capture_output=True, text=True, timeout=900, cwd=str(HERE))
+    assert proc.returncode == 0, (proc.stdout or "") + (proc.stderr or "")
+    assert "all exact" in proc.stdout

@@ -1,0 +1,153 @@
+"""Pallas kernels vs pure-jnp oracles — interpret=True sweeps over
+shapes/dtypes.  Counts are integers, so checks are exact equality."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import bucket_join, ops, radix_hist, ref
+
+
+def _mk(rng, b, c, d, side):
+    keys = rng.integers(0, d, size=(b, c)).astype(np.int32)
+    valid = rng.random((b, c)) < 0.85
+    return jnp.asarray(keys), jnp.asarray(valid)
+
+
+SHAPES = [(1, 128, 128, 128), (4, 128, 256, 128), (3, 256, 128, 384),
+          (2, 384, 384, 256)]
+
+
+@pytest.mark.parametrize("b,cr,cs,ct", SHAPES)
+@pytest.mark.parametrize("d", [7, 1000])
+def test_count3_linear_kernel(b, cr, cs, ct, d):
+    rng = np.random.default_rng(b * 1000 + cr + d)
+    rb, rv = _mk(rng, b, cr, d, "r")
+    sb, sv = _mk(rng, b, cs, d, "s")
+    sc = jnp.asarray(rng.integers(0, d, size=(b, cs)).astype(np.int32))
+    tc, tv = _mk(rng, b, ct, d, "t")
+    want = ops.bucket_count3_linear(rb, rv, sb, sc, sv, tc, tv,
+                                    use_kernel=False)
+    got = ops.bucket_count3_linear(rb, rv, sb, sc, sv, tc, tv,
+                                   use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,cr,cs,ct", SHAPES[:2])
+@pytest.mark.parametrize("d", [13, 400])
+def test_per_r_counts_kernel(b, cr, cs, ct, d):
+    rng = np.random.default_rng(cr + cs + d)
+    rb, rv = _mk(rng, b, cr, d, "r")
+    sb, sv = _mk(rng, b, cs, d, "s")
+    sc = jnp.asarray(rng.integers(0, d, size=(b, cs)).astype(np.int32))
+    tc, tv = _mk(rng, b, ct, d, "t")
+    want = ops.bucket_per_r_counts(rb, rv, sb, sc, sv, tc, tv,
+                                   use_kernel=False)
+    got = ops.bucket_per_r_counts(rb, rv, sb, sc, sv, tc, tv,
+                                  use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,cr,cs,ct", SHAPES[:2])
+@pytest.mark.parametrize("d", [11, 333])
+def test_count3_cyclic_kernel(b, cr, cs, ct, d):
+    rng = np.random.default_rng(2 * cr + cs + d)
+    ra, rv = _mk(rng, b, cr, d, "r")
+    rb = jnp.asarray(rng.integers(0, d, size=(b, cr)).astype(np.int32))
+    sb, sv = _mk(rng, b, cs, d, "s")
+    sc = jnp.asarray(rng.integers(0, d, size=(b, cs)).astype(np.int32))
+    tc, tv = _mk(rng, b, ct, d, "t")
+    ta = jnp.asarray(rng.integers(0, d, size=(b, ct)).astype(np.int32))
+    want = ops.bucket_count3_cyclic(ra, rb, rv, sb, sc, sv, tc, ta, tv,
+                                    use_kernel=False)
+    got = ops.bucket_count3_cyclic(ra, rb, rv, sb, sc, sv, tc, ta, tv,
+                                   use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("b,ca,cb", [(1, 128, 128), (5, 256, 128), (2, 384, 512)])
+@pytest.mark.parametrize("d", [5, 999])
+def test_pair_count_kernel(b, ca, cb, d):
+    rng = np.random.default_rng(ca + cb + d)
+    ka, va = _mk(rng, b, ca, d, "a")
+    kb, vb = _mk(rng, b, cb, d, "b")
+    want = ops.bucket_pair_count(ka, va, kb, vb, use_kernel=False)
+    got = ops.bucket_pair_count(ka, va, kb, vb, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,nb", [(1024, 16), (2048, 64), (4096, 128),
+                                  (1000, 32)])
+def test_radix_histogram_kernel(n, nb):
+    rng = np.random.default_rng(n + nb)
+    keys = jnp.asarray(rng.integers(0, 10000, size=n).astype(np.int32))
+    valid = jnp.asarray(rng.random(n) < 0.9)
+    want = ops.radix_histogram(keys, valid, n_buckets=nb, use_kernel=False)
+    got = ops.radix_histogram(keys, valid, n_buckets=nb, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert int(np.asarray(want).sum()) == int(np.asarray(valid).sum())
+
+
+def test_unaligned_capacity_padding():
+    """ops.* pads non-128-multiple capacities with side sentinels; results
+    must match the unpadded reference."""
+    rng = np.random.default_rng(7)
+    b, cr, cs, ct, d = 2, 100, 130, 70, 50
+    rb, rv = _mk(rng, b, cr, d, "r")
+    sb, sv = _mk(rng, b, cs, d, "s")
+    sc = jnp.asarray(rng.integers(0, d, size=(b, cs)).astype(np.int32))
+    tc, tv = _mk(rng, b, ct, d, "t")
+    want = ops.bucket_count3_linear(rb, rv, sb, sc, sv, tc, tv,
+                                    use_kernel=False)
+    got = ops.bucket_count3_linear(rb, rv, sb, sc, sv, tc, tv,
+                                   use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_end_to_end_linear3(rng):
+    """Full Algorithm 1 with the Pallas kernel as the inner join."""
+    from conftest import make_rel, oracle_linear3_count
+    from repro.core import driver, linear3
+    r, rd = make_rel(rng, 90, ("a", "b"), 25)
+    s, sd = make_rel(rng, 100, ("b", "c"), 25)
+    t, td = make_rel(rng, 95, ("c", "d"), 25)
+    expect = oracle_linear3_count(rd["b"], sd["b"], sd["c"], td["c"])
+    plan = linear3.default_plan(90, 100, 95, m_budget=48, u=2)
+    res, _ = driver.linear3_count_auto(r, s, t, plan, use_kernel=True)
+    assert int(res.count) == expect
+
+
+def test_fm_registers_ref_matches_direct_sketch(rng):
+    """kernels.ref.fm_registers (implicit-join sketch) must equal the sketch
+    of the explicitly materialized joined (a, d) pairs."""
+    from collections import defaultdict
+    from repro.core import sketches
+    b, cr, cs, ct, d, K = 2, 24, 30, 26, 12, 16
+    ra = jnp.asarray(rng.integers(0, d, (b, cr)).astype(np.int32))
+    rb = jnp.asarray(rng.integers(0, d, (b, cr)).astype(np.int32))
+    sb = jnp.asarray(rng.integers(0, d, (b, cs)).astype(np.int32))
+    sc = jnp.asarray(rng.integers(0, d, (b, cs)).astype(np.int32))
+    tc = jnp.asarray(rng.integers(0, d, (b, ct)).astype(np.int32))
+    td = jnp.asarray(rng.integers(0, d, (b, ct)).astype(np.int32))
+    got = ref.fm_registers(ra, rb, sb, sc, tc, td, K)
+    # oracle: materialize joined (a,d) pairs per bucket, sketch them
+    from repro.core import hashing
+    for bi in range(b):
+        pairs = set()
+        for i in range(cr):
+            for j in range(cs):
+                if int(rb[bi, i]) == int(sb[bi, j]):
+                    for k in range(ct):
+                        if int(sc[bi, j]) == int(tc[bi, k]):
+                            pairs.add((int(ra[bi, i]), int(td[bi, k])))
+        if not pairs:
+            np.testing.assert_array_equal(np.asarray(got[bi]), 0)
+            continue
+        pa = jnp.asarray([p[0] for p in pairs], dtype=jnp.int32)
+        pd = jnp.asarray([p[1] for p in pairs], dtype=jnp.int32)
+        key = (hashing.mix32(pa, 0x1B873593)
+               ^ hashing.mix32(pd, 0xE6546B64)).astype(jnp.int32)
+        want = sketches.add(sketches.empty(K), key,
+                            jnp.ones(key.shape, bool))
+        np.testing.assert_array_equal(np.asarray(got[bi]), np.asarray(want))
