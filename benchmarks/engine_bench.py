@@ -1,0 +1,161 @@
+"""Fused engine vs scan-based driver on the Fig 4 workload shapes.
+
+Measures the tentpole claim of the engine PR: sweeping the H(B)×g(C)
+partition grid as ONE fused launch (``core.engine.*_count_fused``) beats the
+nested-``lax.scan`` per-bucket-row drivers (``core.linear3`` etc.) — the
+same partitioning, the same per-bucket math, only the launch structure
+differs.  Shapes are the paper's Fig 4 workloads (e,f: linear self-join;
+g,h,i: star; plus the §5 triangle query), scaled to CPU-benchable sizes with
+the partition counts preserved (tens of coarse partitions, so the scan
+driver pays hundreds of sequential steps).
+
+Both sides run the compiled XLA path (``use_kernel=False``) so the
+comparison is launch-structure vs launch-structure, not interpreter
+overhead.  Results go to BENCH_engine.json (CI uploads it every run —
+the perf trajectory record).
+
+    PYTHONPATH=src python benchmarks/engine_bench.py [--quick] [--repeats N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import cyclic3, engine, linear3, star3  # noqa: E402
+from repro.core.relation import Relation  # noqa: E402
+
+OUT = pathlib.Path("BENCH_engine.json")
+
+
+def _rel(rng, n, cols, d):
+    return Relation.from_arrays(
+        **{c: rng.integers(0, d, size=n).astype(np.int32) for c in cols})
+
+
+def _time(fn, *args, repeats: int) -> float:
+    """Best-of-N wall time in ms for an already-jitted callable."""
+    jax.block_until_ready(fn(*args))          # compile + warm caches
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def bench_linear(rng, n, d, m_budget, u, repeats):
+    r = _rel(rng, n, ("a", "b"), d)
+    s = _rel(rng, n, ("b", "c"), d)
+    t = _rel(rng, n, ("c", "d"), d)
+    plan = linear3.default_plan(n, n, n, m_budget=m_budget, u=u, slack=3.0)
+    scan_fn = jax.jit(lambda a, b, c: linear3.linear3_count(a, b, c, plan))
+    fused_fn = jax.jit(
+        lambda a, b, c: engine.linear3_count_fused(a, b, c, plan))
+    scan_ms = _time(scan_fn, r, s, t, repeats=repeats)
+    fused_ms = _time(fused_fn, r, s, t, repeats=repeats)
+    c0, c1 = int(scan_fn(r, s, t).count), int(fused_fn(r, s, t).count)
+    return {"n": n, "d": d, "h_parts": plan.h_parts, "g_parts": plan.g_parts,
+            "u": plan.u, "scan_ms": scan_ms, "fused_ms": fused_ms,
+            "speedup": scan_ms / fused_ms, "count_scan": c0,
+            "count_fused": c1, "match": c0 == c1}
+
+
+def bench_cyclic(rng, n, d, m_budget, repeats):
+    r = _rel(rng, n, ("a", "b"), d)
+    s = _rel(rng, n, ("b", "c"), d)
+    t = _rel(rng, n, ("c", "a"), d)
+    plan = cyclic3.default_plan(n, n, n, m_budget=m_budget, uh=4, ug=4,
+                                slack=3.0)
+    scan_fn = jax.jit(lambda a, b, c: cyclic3.cyclic3_count(a, b, c, plan))
+    fused_fn = jax.jit(
+        lambda a, b, c: engine.cyclic3_count_fused(a, b, c, plan))
+    scan_ms = _time(scan_fn, r, s, t, repeats=repeats)
+    fused_ms = _time(fused_fn, r, s, t, repeats=repeats)
+    c0, c1 = int(scan_fn(r, s, t).count), int(fused_fn(r, s, t).count)
+    return {"n": n, "d": d, "h_parts": plan.h_parts, "g_parts": plan.g_parts,
+            "f_parts": plan.f_parts, "scan_ms": scan_ms,
+            "fused_ms": fused_ms, "speedup": scan_ms / fused_ms,
+            "count_scan": c0, "count_fused": c1, "match": c0 == c1}
+
+
+def bench_star(rng, n_dim, n_fact, d, chunks, repeats):
+    r = _rel(rng, n_dim, ("a", "b"), d)
+    s = _rel(rng, n_fact, ("b", "c"), d)
+    t = _rel(rng, n_dim, ("c", "d"), d)
+    plan = star3.default_plan(n_dim, n_fact, n_dim, uh=8, ug=8,
+                              chunks=chunks, slack=3.0)
+    scan_fn = jax.jit(lambda a, b, c: star3.star3_count(a, b, c, plan))
+    fused_fn = jax.jit(
+        lambda a, b, c: engine.star3_count_fused(a, b, c, plan))
+    scan_ms = _time(scan_fn, r, s, t, repeats=repeats)
+    fused_ms = _time(fused_fn, r, s, t, repeats=repeats)
+    c0, c1 = int(scan_fn(r, s, t).count), int(fused_fn(r, s, t).count)
+    return {"n_dim": n_dim, "n_fact": n_fact, "d": d, "chunks": chunks,
+            "scan_ms": scan_ms, "fused_ms": fused_ms,
+            "speedup": scan_ms / fused_ms, "count_scan": c0,
+            "count_fused": c1, "match": c0 == c1}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI sizes (smaller relations, fewer repeats)")
+    ap.add_argument("--repeats", type=int, default=None)
+    args = ap.parse_args()
+
+    repeats = args.repeats or (2 if args.quick else 4)
+    scale = 1 if args.quick else 2
+    rng = np.random.default_rng(20260726)
+
+    shapes = {}
+    print(f"engine_bench: backend={jax.default_backend()} "
+          f"quick={args.quick}")
+    # Fig 4(e,f): linear self-join, |R|=|S|=|T|, tens of coarse partitions
+    shapes["fig4ef_linear"] = bench_linear(
+        rng, n=24000 * scale, d=4096 * scale, m_budget=1024 * scale, u=16,
+        repeats=repeats)
+    # §5 triangle query on a random graph
+    shapes["cyclic_triangles"] = bench_cyclic(
+        rng, n=6000 * scale, d=512 * scale, m_budget=512 * scale,
+        repeats=repeats)
+    # Fig 4(h,i): star schema — small dimensions, streamed fact
+    shapes["fig4hi_star"] = bench_star(
+        rng, n_dim=2000 * scale, n_fact=120000 * scale, d=2048 * scale,
+        chunks=8, repeats=repeats)
+
+    for name, row in shapes.items():
+        print(f"  {name}: scan {row['scan_ms']:.1f} ms, "
+              f"fused {row['fused_ms']:.1f} ms, "
+              f"speedup {row['speedup']:.2f}x, match={row['match']}")
+
+    best = max(s["speedup"] for s in shapes.values())
+    ok = best >= 2.0 and all(s["match"] for s in shapes.values())
+    report = {
+        "backend": jax.default_backend(),
+        "quick": bool(args.quick),
+        "repeats": repeats,
+        "shapes": shapes,
+        "claim_fused_ge_2x": {
+            "ok": ok, "best_speedup": best,
+            "detail": "fused engine >= 2x over scan driver on at least one "
+                      "Fig 4 shape, counts exactly equal",
+        },
+    }
+    OUT.write_text(json.dumps(report, indent=2))
+    print(f"[{'PASS' if ok else 'FAIL'}] best fused speedup {best:.2f}x "
+          f"-> {OUT}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

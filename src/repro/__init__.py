@@ -1,0 +1,4 @@
+"""Efficient Multiway Hash Join on Reconfigurable Hardware — JAX/Pallas
+reproduction.  See README.md for the package map."""
+
+__version__ = "0.2.0"

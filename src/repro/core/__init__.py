@@ -2,6 +2,9 @@
 
 Public API:
   Relation                 — fixed-capacity columnar relation
+  MultiwayJoinEngine       — fused partition-sweep engine + skew recovery
+  linear3_count_fused / cyclic3_count_fused / star3_count_fused
+                           — single-launch traceable fused sweeps
   linear3_count / linear3_per_r_counts / linear3_fm_distinct
   cyclic3_count            — triangle (cyclic) 3-way join
   star3_count              — star-schema 3-way join
@@ -10,6 +13,9 @@ Public API:
 """
 
 from repro.core.relation import Relation  # noqa: F401
+from repro.core.engine import (  # noqa: F401
+    EngineResult, MultiwayJoinEngine, PerRResult, cyclic3_count_fused,
+    linear3_count_fused, star3_count_fused)
 from repro.core.binary_join import (  # noqa: F401
     cascaded_binary_count, cascaded_binary_per_r_counts, join_count,
     join_materialize, probe_weight_sum, bucketed_join_count)

@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import cyclic3, hashing, linear3, partition, star3
+from repro import compat
+from repro.core import cyclic3, engine, hashing, linear3, partition, star3
 from repro.core.relation import Relation
 from repro.kernels import ops as kops
 
@@ -101,7 +102,7 @@ def cyclic3_count_sharded(mesh: Mesh, row: str, col: str,
                           *, shuffle_slack: float = 3.0,
                           local_uh: int = 4, local_ug: int = 4,
                           local_f: int = 2, local_slack: float = 3.0,
-                          use_kernel: bool = False):
+                          use_kernel: bool = False, fused: bool = False):
     """Build a jit-able distributed triangle-count:  f(R, S, T) -> result.
 
     R(a,b), S(b,c), T(c,a) arrive sharded in arrival order over the whole
@@ -144,7 +145,12 @@ def cyclic3_count_sharded(mesh: Mesh, row: str, col: str,
                 sl.capacity, local_f * local_ug, local_slack),
             t_cap=partition.suggest_capacity(
                 tl.capacity, local_f * local_uh, local_slack))
-        res = cyclic3.cyclic3_count(rl, sl, tl, plan, use_kernel=use_kernel)
+        if fused:
+            res = engine.cyclic3_count_fused(rl, sl, tl, plan,
+                                             use_kernel=use_kernel)
+        else:
+            res = cyclic3.cyclic3_count(rl, sl, tl, plan,
+                                        use_kernel=use_kernel)
 
         count = jax.lax.psum(res.count, (row, col))
         ovf = _psum_bool(ovf_r1 | ovf_r2 | ovf_s | ovf_t | res.overflowed,
@@ -154,11 +160,11 @@ def cyclic3_count_sharded(mesh: Mesh, row: str, col: str,
     spec = P((row, col))
 
     def fn(r: Relation, s: Relation, t: Relation) -> DistJoinResult:
-        sm = jax.shard_map(
+        sm = compat.shard_map(
             lambda rc, rv, sc, sv, tc, tv: local(rc, rv, sc, sv, tc, tv),
             mesh=mesh,
             in_specs=(spec,) * 6,
-            out_specs=(P(), P()), check_vma=False)
+            out_specs=(P(), P()))
         count, ovf = sm(dict(r.columns), r.valid, dict(s.columns), s.valid,
                         dict(t.columns), t.valid)
         return DistJoinResult(count, ovf)
@@ -174,7 +180,7 @@ def linear3_count_sharded(mesh: Mesh, row: str, col: str,
                           *, shuffle_slack: float = 3.0,
                           local_u: int = 8, local_g: int = 4,
                           local_slack: float = 3.0,
-                          use_kernel: bool = False):
+                          use_kernel: bool = False, fused: bool = False):
     """Distributed Algorithm 1: the whole mesh is the flat U-way PMU grid.
 
     R and S shuffle to device h(B) (two-phase: row then col hash of B);
@@ -214,7 +220,12 @@ def linear3_count_sharded(mesh: Mesh, row: str, col: str,
                                              local_g * local_u, local_slack),
             t_cap=partition.suggest_capacity(tl.capacity, local_g,
                                              local_slack))
-        res = linear3.linear3_count(rl, sl, tl, plan, use_kernel=use_kernel)
+        if fused:
+            res = engine.linear3_count_fused(rl, sl, tl, plan,
+                                             use_kernel=use_kernel)
+        else:
+            res = linear3.linear3_count(rl, sl, tl, plan,
+                                        use_kernel=use_kernel)
         count = jax.lax.psum(res.count, (row, col))
         ovf = _psum_bool(ovf_r1 | ovf_r2 | ovf_s1 | ovf_s2 | res.overflowed,
                          (row, col))
@@ -223,9 +234,8 @@ def linear3_count_sharded(mesh: Mesh, row: str, col: str,
     spec = P((row, col))
 
     def fn(r: Relation, s: Relation, t: Relation) -> DistJoinResult:
-        sm = jax.shard_map(
-            local, mesh=mesh, in_specs=(spec,) * 6, out_specs=(P(), P()),
-            check_vma=False)
+        sm = compat.shard_map(
+            local, mesh=mesh, in_specs=(spec,) * 6, out_specs=(P(), P()))
         count, ovf = sm(dict(r.columns), r.valid, dict(s.columns), s.valid,
                         dict(t.columns), t.valid)
         return DistJoinResult(count, ovf)
@@ -240,7 +250,7 @@ def linear3_count_sharded(mesh: Mesh, row: str, col: str,
 def star3_count_sharded(mesh: Mesh, row: str, col: str,
                         *, shuffle_slack: float = 3.0,
                         local_chunks: int = 1, local_slack: float = 3.0,
-                        use_kernel: bool = False):
+                        use_kernel: bool = False, fused: bool = False):
     """Distributed star join: R pinned by h(B) on rows (replicated along
     cols), T pinned by g(C) on cols (replicated along rows); each fact tuple
     s(b,c) is routed to exactly the one device (h(b), g(c)) — S crosses the
@@ -277,7 +287,11 @@ def star3_count_sharded(mesh: Mesh, row: str, col: str,
             s_cap=partition.suggest_capacity(sl.capacity,
                                              local_chunks * 16, local_slack),
             t_cap=partition.suggest_capacity(tl.capacity, 4, local_slack))
-        res = star3.star3_count(rl, sl, tl, plan, use_kernel=use_kernel)
+        if fused:
+            res = engine.star3_count_fused(rl, sl, tl, plan,
+                                           use_kernel=use_kernel)
+        else:
+            res = star3.star3_count(rl, sl, tl, plan, use_kernel=use_kernel)
         count = jax.lax.psum(res.count, (row, col))
         ovf = _psum_bool(ovf_r | ovf_t | ovf_s1 | ovf_s2 | res.overflowed,
                          (row, col))
@@ -286,14 +300,39 @@ def star3_count_sharded(mesh: Mesh, row: str, col: str,
     spec = P((row, col))
 
     def fn(r: Relation, s: Relation, t: Relation) -> DistJoinResult:
-        sm = jax.shard_map(
-            local, mesh=mesh, in_specs=(spec,) * 6, out_specs=(P(), P()),
-            check_vma=False)
+        sm = compat.shard_map(
+            local, mesh=mesh, in_specs=(spec,) * 6, out_specs=(P(), P()))
         count, ovf = sm(dict(r.columns), r.valid, dict(s.columns), s.valid,
                         dict(t.columns), t.valid)
         return DistJoinResult(count, ovf)
 
     return fn
+
+
+# --------------------------------------------------------------------------
+# engine entry point: fused local joins on the mesh
+# --------------------------------------------------------------------------
+
+def engine_count_sharded(mesh: Mesh, row: str, col: str,
+                         kind: str = "linear", **kw):
+    """Distributed fused-engine join: the coarse H(B) (resp. H(A)×G(B),
+    h(B)×g(C)) partitions shard across devices exactly as in the scan-based
+    builders, but each device's local sweep is ONE fused kernel launch
+    (``engine.*_count_fused``) instead of a nested lax.scan — the mesh is
+    the coarse grid, the fused Pallas grid is the fine one.
+
+    Overflow anywhere is psum-reduced and reported; the host-side engine
+    (``MultiwayJoinEngine``) is the recovery layer — re-invoke on the
+    flagged shards with a salted plan, as ``core.driver.engine_count`` does
+    on a single host.
+    """
+    builders = {"linear": linear3_count_sharded,
+                "cyclic": cyclic3_count_sharded,
+                "star": star3_count_sharded}
+    if kind not in builders:
+        raise ValueError(f"unknown kind {kind!r}; choose from "
+                         f"{sorted(builders)}")
+    return builders[kind](mesh, row, col, fused=True, **kw)
 
 
 # --------------------------------------------------------------------------

@@ -10,6 +10,12 @@ These drivers implement the re-partition loop: on overflow, grow the
 per-bucket capacities geometrically (and optionally re-salt the hash
 functions) and re-run.  Capacities are static shapes, so each retry re-jits;
 retries are rare under the plan defaults and the cost is off the hot path.
+
+``engine_count`` is the preferred entry point: it dispatches to the fused
+``core.engine.MultiwayJoinEngine``, which keeps the exact partitions from
+the first pass and re-runs only the skewed shards (one fused kernel launch
+per round instead of h_parts × g_parts of them).  The ``*_auto`` whole-query
+retry drivers remain as the scan-based baseline.
 """
 
 from __future__ import annotations
@@ -17,11 +23,30 @@ from __future__ import annotations
 import math
 from typing import Any
 
-from repro.core import cyclic3, linear3, star3
+from repro.core import cyclic3, engine, linear3, star3
 
 
 class OverflowError_(RuntimeError):
     pass
+
+
+def engine_count(kind: str, r, s, t, plan=None, *, m_budget: int | None = None,
+                 use_kernel: bool = False, max_rounds: int = 3,
+                 growth: float = 2.0, **cols) -> engine.EngineResult:
+    """Fused-engine count with surgical skew recovery (exact by
+    construction; ``overflowed`` is always False on return)."""
+    eng = engine.MultiwayJoinEngine(kind, use_kernel=use_kernel,
+                                    max_rounds=max_rounds, growth=growth)
+    return eng.count(r, s, t, plan, m_budget=m_budget, **cols)
+
+
+def engine_per_r_counts(r, s, t, plan, *, use_kernel: bool = False,
+                        max_rounds: int = 3, growth: float = 2.0,
+                        **cols) -> engine.PerRResult:
+    """Fused-engine per-R-tuple counts (Example 1) with skew recovery."""
+    eng = engine.MultiwayJoinEngine("linear", use_kernel=use_kernel,
+                                    max_rounds=max_rounds, growth=growth)
+    return eng.per_r_counts(r, s, t, plan, **cols)
 
 
 def _grown(plan: Any, growth: float, align: int = 8) -> Any:

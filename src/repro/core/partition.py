@@ -137,13 +137,15 @@ def bucketize_by_ids(rel: Relation, flat_ids: jnp.ndarray, n_buckets: int,
     return Buckets(cols, valid, counts.reshape(out_shape), overflowed)
 
 
-def composite_ids(rel: Relation, specs: list[tuple[str, int, str]]) -> tuple[jnp.ndarray, int]:
+def composite_ids(rel: Relation, specs: list[tuple[str, int, str]],
+                  salt: int = 0) -> tuple[jnp.ndarray, int]:
     """Flat composite bucket id from [(column, n_buckets, hash_fn), ...],
-    most-significant first.  Invalid rows get id == prod(n_buckets)."""
+    most-significant first.  Invalid rows get id == prod(n_buckets).
+    ``salt`` re-randomizes every level (skew-recovery re-partitioning)."""
     flat = jnp.zeros((rel.capacity,), jnp.int32)
     total = 1
     for col, nb, fn in specs:
-        ids = bucket_ids_for(rel, col, nb, fn)
+        ids = bucket_ids_for(rel, col, nb, fn, salt)
         flat = flat * nb + jnp.clip(ids, 0, nb - 1)
         total *= nb
     return jnp.where(rel.valid, flat, jnp.int32(total)), total

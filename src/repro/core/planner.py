@@ -1,17 +1,22 @@
 """Join planner: 3-way vs cascaded-binary decision (§6 logic).
 
-Two decision layers:
+Three decision layers:
   * traffic  — the paper's closed-form tuple-traffic comparison
     (re-exported from cost_model: Examples 3/4 thresholds),
   * time     — the Appendix-A cycle model on a concrete hardware profile
     (captures the compute/DRAM/SSD terms traffic alone misses, e.g. the
-    v5e case where fast host DMA shrinks the 3-way win to 2.1×).
+    v5e case where fast host DMA shrinks the 3-way win to 2.1×),
+  * execution — ``plan_query`` returns an **executable** ``EnginePlan``:
+    the timed choice plus a sized shape plan bound to the fused
+    ``MultiwayJoinEngine``, so ``plan.run(r, s, t)`` goes straight from
+    planning to an exact (skew-recovered) answer.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
+from repro.core import binary_join, cyclic3, engine, linear3, star3
 from repro.core.cost_model import (  # noqa: F401  (traffic layer)
     PlanChoice, choose_cyclic_strategy, choose_linear_strategy,
     cascaded_binary_tuples, cyclic3_tuples, linear3_tuples)
@@ -49,3 +54,85 @@ def choose_star_timed(n_r: float, n_s: float, n_t: float, d: float,
         "3way" if t3.total < tc.total else "cascade",
         t3.total, tc.total, tc.total / t3.total,
         t3.bottleneck, tc.bottleneck)
+
+
+# --------------------------------------------------------------------------
+# executable engine plans
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EnginePlan:
+    """A sized, executable query plan: the timed 3-way/cascade decision plus
+    the shape plan the fused engine runs with.  ``run`` executes the chosen
+    strategy and returns an exact count (skew-recovered on the 3-way path,
+    capacity-retried on the cascade path)."""
+
+    kind: str                                   # "linear"|"cyclic"|"star"
+    strategy: str                               # "3way" | "cascade"
+    shape_plan: object                          # Linear3Plan | Cyclic3Plan | Star3Plan
+    choice: TimedChoice
+    m_budget: int | None
+    use_kernel: bool = False
+    max_rounds: int = 3
+    growth: float = 2.0
+
+    def build(self) -> engine.MultiwayJoinEngine:
+        return engine.MultiwayJoinEngine(
+            self.kind, use_kernel=self.use_kernel,
+            max_rounds=self.max_rounds, growth=self.growth)
+
+    def run(self, r, s, t, **cols) -> engine.EngineResult:
+        if self.strategy == "3way" or self.kind == "cyclic":
+            return self.build().count(r, s, t, self.shape_plan, **cols)
+        # cascade fallback: size the materialized intermediate from the
+        # EXACT first-join cardinality (a cheap host-side histogram
+        # product), so skewed keys can't overflow it
+        import jax.numpy as jnp
+        import numpy as np
+        rv = np.asarray(r.col(cols.get("rb", "b")))[np.asarray(r.valid)]
+        sv = np.asarray(s.col(cols.get("sb", "b")))[np.asarray(s.valid)]
+        ru, rc = np.unique(rv, return_counts=True)
+        su, sc = np.unique(sv, return_counts=True)
+        _, ri, si = np.intersect1d(ru, su, return_indices=True)
+        inter = int((rc[ri].astype(np.int64) * sc[si]).sum())
+        res = binary_join.cascaded_binary_count(
+            r, s, t, intermediate_capacity=max(64, inter + 8), **cols)
+        assert not bool(res.intermediate_overflowed)   # exact-sized above
+        # same result contract as the 3-way engine path; cascade traffic =
+        # both inputs + the intermediate written then re-read + T
+        tuples = int(r.n) + int(s.n) + 2 * inter + int(t.n)
+        return engine.EngineResult(res.count, jnp.asarray(False),
+                                   jnp.int32(tuples), 1)
+
+
+def plan_query(kind: str, n_r: int, n_s: int, n_t: int, d: float, *,
+               m_budget: int | None = None, hw: HW = PLASTICINE,
+               use_kernel: bool = False, max_rounds: int = 3,
+               growth: float = 2.0, **plan_kw) -> EnginePlan:
+    """Size a shape plan from the paper's partitioning rules AND pick the
+    3-way vs cascade strategy from the Appendix-A time model — returning an
+    executable plan rather than a recommendation."""
+    if kind in ("linear", "cyclic") and m_budget is None:
+        raise ValueError(f"{kind} plans need m_budget (on-chip partition "
+                         "size in tuples)")
+    if kind == "linear":
+        choice = choose_linear_timed(n_r, n_s, n_t, d, hw)
+        shape = linear3.default_plan(n_r, n_s, n_t, m_budget=m_budget,
+                                     **plan_kw)
+    elif kind == "cyclic":
+        # the cyclic (triangle) query has no 2-join cascade, so the
+        # strategy is forced; no cyclic cycle model exists yet either, so
+        # the time fields are explicitly n/a rather than a wrong estimate
+        choice = TimedChoice("3way", float("nan"), float("nan"),
+                             float("inf"), "n/a", "n/a")
+        shape = cyclic3.default_plan(n_r, n_s, n_t, m_budget=m_budget,
+                                     **plan_kw)
+    elif kind == "star":
+        choice = choose_star_timed(n_r, n_s, n_t, d, hw)
+        shape = star3.default_plan(n_r, n_s, n_t, **plan_kw)
+    else:
+        raise ValueError(f"unknown kind {kind!r}")
+    return EnginePlan(kind=kind, strategy=choice.strategy, shape_plan=shape,
+                      choice=choice, m_budget=m_budget,
+                      use_kernel=use_kernel, max_rounds=max_rounds,
+                      growth=growth)

@@ -181,3 +181,208 @@ def count3_cyclic(ra, rb, sb, sc, tc, ta, *, interpret: bool = True):
         interpret=interpret,
     )(ra, rb, sb, sc, tc, ta)
     return out[:, 0].astype(jnp.int32)
+
+
+# ==========================================================================
+# Fused partition-sweep kernels (engine hot path)
+# ==========================================================================
+#
+# The kernels above join ONE bucket row per grid step; the drivers in
+# core/{linear3,cyclic3,star3}.py sweep the coarse H(B)×g(C) partition grid
+# with nested lax.scan loops, launching a fresh pallas_call per step.  That
+# serializes the sweep and leaves the grid dimension — the paper's U-way PMU
+# parallelism — idle between launches.
+#
+# The fused variants below put the WHOLE sweep into one pallas_call: the grid
+# spans (coarse partitions × PMU buckets × streaming buckets) and BlockSpec
+# index maps pick the partition row per program.  Consequences:
+#   * one kernel launch per query instead of h_parts·g_parts of them,
+#   * Pallas double-buffers the HBM→VMEM operand streams across the whole
+#     sweep (the §6.2 prefetch optimization, now spanning partitions),
+#   * operands whose index map ignores the innermost grid dim (e.g. the R
+#     partition during the g(C) stream) stay resident in VMEM — the paper's
+#     "R partition pinned on-chip" falls out of the revisiting rule.
+#
+# The streaming dimension is innermost and accumulates into a revisited
+# output block (zeroed when its program_id is 0 — the standard matmul-K
+# pattern), so outputs are per-PMU-bucket partials, summed by the caller.
+#
+# Accumulators are int32, NOT f32: a single per-bucket step stays within
+# the ≤2^24 exact-f32 contract, but the fused kernels accumulate a whole
+# partition's sweep into one output cell, which can exceed it.
+
+
+def _fused_linear_kernel(rb_ref, sb_ref, sc_ref, tc_ref, out_ref):
+    """grid = (h_parts, u, g_parts);  g (T stream) innermost."""
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        out_ref[0, 0] = 0
+
+    rb = rb_ref[0, 0, :]
+    sb = sb_ref[0, 0, 0, :]
+    sc = sc_ref[0, 0, 0, :]
+    tc = tc_ref[0, :]
+    wr = jnp.sum((sb[:, None] == rb[None, :]).astype(jnp.int32), axis=1)
+    wt = jnp.sum((sc[:, None] == tc[None, :]).astype(jnp.int32), axis=1)
+    out_ref[0, 0] += jnp.sum(wr * wt)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_count3_linear(rb, sb, sc, tc, *, interpret: bool = True):
+    """Whole linear-3 sweep in one launch.
+
+    rb: [hp, u, Cr], sb/sc: [hp, gp, u, Cs], tc: [gp, Ct]
+    returns per-(H, h) bucket counts [hp, u] int32.
+    """
+    hp, u, cr = rb.shape
+    _, gp, _, cs = sb.shape
+    _, ct = tc.shape
+    out = pl.pallas_call(
+        _fused_linear_kernel,
+        grid=(hp, u, gp),
+        in_specs=[
+            pl.BlockSpec((1, 1, cr), lambda i, k, j: (i, k, 0)),
+            pl.BlockSpec((1, 1, 1, cs), lambda i, k, j: (i, j, k, 0)),
+            pl.BlockSpec((1, 1, 1, cs), lambda i, k, j: (i, j, k, 0)),
+            pl.BlockSpec((1, ct), lambda i, k, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, k, j: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((hp, u), jnp.int32),
+        interpret=interpret,
+    )(rb, sb, sc, tc)
+    return out
+
+
+def _fused_per_r_kernel(rb_ref, sb_ref, sc_ref, tc_ref, out_ref):
+    """grid = (h_parts, u, g_parts);  per-R-slot counts, g innermost."""
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        out_ref[0, 0, :] = jnp.zeros_like(out_ref[0, 0, :])
+
+    rb = rb_ref[0, 0, :]
+    sb = sb_ref[0, 0, 0, :]
+    sc = sc_ref[0, 0, 0, :]
+    tc = tc_ref[0, :]
+    # per-step dot stays on the MXU in f32 (exact: one bucket step ≤ 2^24);
+    # the cross-step accumulation is int32
+    wt = jnp.sum((sc[:, None] == tc[None, :]).astype(jnp.float32), axis=1)
+    m1 = (sb[:, None] == rb[None, :]).astype(jnp.float32)       # (Cs, Cr)
+    step = jnp.dot(wt[None, :], m1, preferred_element_type=jnp.float32)[0]
+    out_ref[0, 0, :] += step.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_per_r_counts(rb, sb, sc, tc, *, interpret: bool = True):
+    """Per-R-slot counts for the whole sweep: returns [hp, u, Cr] int32."""
+    hp, u, cr = rb.shape
+    _, gp, _, cs = sb.shape
+    _, ct = tc.shape
+    out = pl.pallas_call(
+        _fused_per_r_kernel,
+        grid=(hp, u, gp),
+        in_specs=[
+            pl.BlockSpec((1, 1, cr), lambda i, k, j: (i, k, 0)),
+            pl.BlockSpec((1, 1, 1, cs), lambda i, k, j: (i, j, k, 0)),
+            pl.BlockSpec((1, 1, 1, cs), lambda i, k, j: (i, j, k, 0)),
+            pl.BlockSpec((1, ct), lambda i, k, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, cr), lambda i, k, j: (i, k, 0)),
+        out_shape=jax.ShapeDtypeStruct((hp, u, cr), jnp.int32),
+        interpret=interpret,
+    )(rb, sb, sc, tc)
+    return out
+
+
+def _fused_cyclic_kernel(ra_ref, rb_ref, sb_ref, sc_ref, tc_ref, ta_ref,
+                         out_ref):
+    """grid = (hp, gp, uh, ug, fp);  f (C stream) innermost."""
+    @pl.when(pl.program_id(4) == 0)
+    def _():
+        out_ref[0, 0, 0, 0] = 0
+
+    ra = ra_ref[0, 0, 0, 0, :]
+    rb = rb_ref[0, 0, 0, 0, :]
+    sb = sb_ref[0, 0, 0, :]
+    sc = sc_ref[0, 0, 0, :]
+    tc = tc_ref[0, 0, 0, :]
+    ta = ta_ref[0, 0, 0, :]
+    m1 = (sb[:, None] == rb[None, :]).astype(jnp.float32)      # (Cs, Cr)
+    m2 = (sc[:, None] == tc[None, :]).astype(jnp.float32)      # (Cs, Ct)
+    p = jnp.dot(m1.T, m2, preferred_element_type=jnp.float32)  # (Cr, Ct)
+    m3 = (ra[:, None] == ta[None, :]).astype(jnp.float32)      # (Cr, Ct)
+    out_ref[0, 0, 0, 0] += jnp.sum(p * m3).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_count3_cyclic(ra, rb, sb, sc, tc, ta, *, interpret: bool = True):
+    """Whole cyclic (triangle) sweep in one launch.
+
+    ra/rb: [hp, gp, uh, ug, Cr] — the (H(A), G(B)) coarse grid × PMU grid;
+    sb/sc: [gp, fp, ug, Cs] — S broadcast down columns via the index map;
+    tc/ta: [hp, fp, uh, Ct] — T broadcast across rows via the index map.
+    returns per-cell counts [hp, gp, uh, ug] int32.
+    """
+    hp, gp, uh, ug, cr = ra.shape
+    _, fp, _, cs = sb.shape
+    _, _, _, ct = tc.shape
+    out = pl.pallas_call(
+        _fused_cyclic_kernel,
+        grid=(hp, gp, uh, ug, fp),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, 1, cr),
+                         lambda i, j, a, b, f: (i, j, a, b, 0)),
+            pl.BlockSpec((1, 1, 1, 1, cr),
+                         lambda i, j, a, b, f: (i, j, a, b, 0)),
+            pl.BlockSpec((1, 1, 1, cs), lambda i, j, a, b, f: (j, f, b, 0)),
+            pl.BlockSpec((1, 1, 1, cs), lambda i, j, a, b, f: (j, f, b, 0)),
+            pl.BlockSpec((1, 1, 1, ct), lambda i, j, a, b, f: (i, f, a, 0)),
+            pl.BlockSpec((1, 1, 1, ct), lambda i, j, a, b, f: (i, f, a, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, 1),
+                               lambda i, j, a, b, f: (i, j, a, b)),
+        out_shape=jax.ShapeDtypeStruct((hp, gp, uh, ug), jnp.int32),
+        interpret=interpret,
+    )(ra, rb, sb, sc, tc, ta)
+    return out
+
+
+def _fused_star_kernel(rb_ref, sb_ref, sc_ref, tc_ref, out_ref):
+    """grid = (uh, ug, chunks);  the S arrival-order stream innermost."""
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        out_ref[0, 0] = 0
+
+    rb = rb_ref[0, :]
+    sb = sb_ref[0, 0, 0, :]
+    sc = sc_ref[0, 0, 0, :]
+    tc = tc_ref[0, :]
+    wr = jnp.sum((sb[:, None] == rb[None, :]).astype(jnp.int32), axis=1)
+    wt = jnp.sum((sc[:, None] == tc[None, :]).astype(jnp.int32), axis=1)
+    out_ref[0, 0] += jnp.sum(wr * wt)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_count3_star(rb, sb, sc, tc, *, interpret: bool = True):
+    """Whole star sweep in one launch: R pinned by rows, T by cols, S
+    streamed in chunks.
+
+    rb: [uh, Cr], sb/sc: [chunks, uh, ug, Cs], tc: [ug, Ct]
+    returns per-PMU counts [uh, ug] int32.
+    """
+    uh, cr = rb.shape
+    ch, _, ug, cs = sb.shape
+    _, ct = tc.shape
+    out = pl.pallas_call(
+        _fused_star_kernel,
+        grid=(uh, ug, ch),
+        in_specs=[
+            pl.BlockSpec((1, cr), lambda i, k, j: (i, 0)),
+            pl.BlockSpec((1, 1, 1, cs), lambda i, k, j: (j, i, k, 0)),
+            pl.BlockSpec((1, 1, 1, cs), lambda i, k, j: (j, i, k, 0)),
+            pl.BlockSpec((1, ct), lambda i, k, j: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, k, j: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((uh, ug), jnp.int32),
+        interpret=interpret,
+    )(rb, sb, sc, tc)
+    return out

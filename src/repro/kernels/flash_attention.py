@@ -41,6 +41,17 @@ from jax.experimental import pallas as pl
 NEG_INF = -2.0e38
 
 
+def _load4(ref, h, start, size):
+    """Load ref[0, h, start:start+size, :] as a [size, D] block.
+
+    All four indices are Slice objects (size-1 slices squeezed afterwards):
+    older jax pallas (0.4.x) rejects plain ints mixed into a pl.load index
+    tuple, and ``h`` is dynamic in the dkv kernel anyway.
+    """
+    return pl.load(ref, (pl.dslice(0, 1), pl.dslice(h, 1),
+                         pl.dslice(start, size), slice(None)))[0, 0]
+
+
 # --------------------------------------------------------------------------
 # forward
 # --------------------------------------------------------------------------
@@ -57,10 +68,8 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
 
     def body(j, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, 0, pl.dslice(j * kv_chunk, kv_chunk),
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, 0, pl.dslice(j * kv_chunk, kv_chunk),
-                            slice(None))).astype(jnp.float32)
+        k = _load4(k_ref, 0, j * kv_chunk, kv_chunk).astype(jnp.float32)
+        v = _load4(v_ref, 0, j * kv_chunk, kv_chunk).astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         k_pos = j * kv_chunk + jax.lax.broadcasted_iota(
@@ -167,10 +176,8 @@ def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, delta_ref,
     q_pos = qi * qc + jax.lax.broadcasted_iota(jnp.int32, (qc, 1), 0)
 
     def body(j, dq):
-        k = pl.load(k_ref, (0, 0, pl.dslice(j * kv_chunk, kv_chunk),
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, 0, pl.dslice(j * kv_chunk, kv_chunk),
-                            slice(None))).astype(jnp.float32)
+        k = _load4(k_ref, 0, j * kv_chunk, kv_chunk).astype(jnp.float32)
+        v = _load4(v_ref, 0, j * kv_chunk, kv_chunk).astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         k_pos = j * kv_chunk + jax.lax.broadcasted_iota(
@@ -214,16 +221,12 @@ def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, delta_ref,
         dk, dv = carry
         hq = it // nqc
         qi = it % nqc
-        qs = (0, hq, pl.dslice(qi * q_chunk, q_chunk), slice(None))
-        q = pl.load(q_ref, qs).astype(jnp.float32) * scale
-        do = pl.load(do_ref, qs).astype(jnp.float32)
-        m = pl.load(m_ref, (0, hq, pl.dslice(qi * q_chunk, q_chunk),
-                            slice(None)))
-        l = jnp.maximum(
-            pl.load(l_ref, (0, hq, pl.dslice(qi * q_chunk, q_chunk),
-                            slice(None))), 1e-30)
-        delta = pl.load(delta_ref, (0, hq, pl.dslice(qi * q_chunk, q_chunk),
-                                    slice(None)))
+        q = _load4(q_ref, hq, qi * q_chunk, q_chunk).astype(jnp.float32) \
+            * scale
+        do = _load4(do_ref, hq, qi * q_chunk, q_chunk).astype(jnp.float32)
+        m = _load4(m_ref, hq, qi * q_chunk, q_chunk)
+        l = jnp.maximum(_load4(l_ref, hq, qi * q_chunk, q_chunk), 1e-30)
+        delta = _load4(delta_ref, hq, qi * q_chunk, q_chunk)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         q_pos = qi * q_chunk + jax.lax.broadcasted_iota(

@@ -96,6 +96,194 @@ def bucket_count3_cyclic(ra, rb, rv, sb, sc, sv, tc, ta, tv, *,
     return ref.bucket_count3_cyclic(ra, rb, sb, sc, tc, ta)
 
 
+# --------------------------------------------------------------------------
+# fused partition-sweep ops (engine hot path)
+# --------------------------------------------------------------------------
+#
+# One call covers the WHOLE coarse partition sweep instead of one bucket
+# row.  ``use_kernel=True`` dispatches to the single-pallas_call fused
+# kernels (grid spans the sweep, §6.2 double buffering across partitions);
+# the default jnp path is equally fused at the XLA level: the partition
+# sweep is batched into one op (or one scan over the streaming dimension
+# when the compare tensors would not fit), so the hot path is one launch —
+# not h_parts × g_parts of them.
+
+# Full-batch threshold for the compare-based jnp fused paths: largest
+# compare tensor (in elements) we are willing to materialize before falling
+# back to a scan over the streaming dimension.
+_FUSE_BATCH_ELEMS = 1 << 26
+
+
+def _bucket_multiplicity(table, probes):
+    """Per-probe occurrence counts within aligned bucket rows.
+
+    table: [B, Ct] sentinel-masked keys; probes: [B, Cp].  Returns [B, Cp]
+    int32 — for each probe, how many equal keys its OWN bucket row holds.
+    Sorted rows + two binary searches per probe (O(Cp log Ct) per bucket,
+    vs O(Cp·Ct) for the all-pairs compare the SIMD kernels use — the right
+    realization of the same per-bucket math for a scalar/CPU backend).
+    """
+    srt = jnp.sort(table, axis=-1)
+    lo = jax.vmap(lambda t, p: jnp.searchsorted(t, p, side="left"))(
+        srt, probes)
+    hi = jax.vmap(lambda t, p: jnp.searchsorted(t, p, side="right"))(
+        srt, probes)
+    return (hi - lo).astype(jnp.int32)
+
+
+def _fused_linear_ref(rb, sb, sc, tc):
+    """rb [hp,u,Cr], sb/sc [hp,gp,u,Cs], tc [gp,Ct] -> [hp,u] int32.
+
+    One fused pass over the whole sweep: every S slot is weighted by its R
+    multiplicity (probing the matching (H, h) bucket) times its T
+    multiplicity (probing the matching g bucket), then per-(H, h) partial
+    sums — identical per-bucket semantics to the scan driver, realized with
+    sorted-bucket probes instead of all-pairs compares.
+    """
+    hp, u, cr = rb.shape
+    _, gp, _, cs = sb.shape
+    _, ct = tc.shape
+    # wr: probe R bucket (H, h) with the S keys routed to it
+    s_by_r = sb.transpose(0, 2, 1, 3).reshape(hp * u, gp * cs)
+    wr = _bucket_multiplicity(rb.reshape(hp * u, cr), s_by_r)
+    # wt: probe T bucket g with the S keys streamed against it
+    s_by_t = sc.transpose(1, 0, 2, 3).reshape(gp, hp * u * cs)
+    wt = _bucket_multiplicity(tc, s_by_t)
+    wt = wt.reshape(gp, hp, u, cs).transpose(1, 2, 0, 3).reshape(
+        hp * u, gp * cs)
+    return jnp.sum(wr * wt, axis=-1).reshape(hp, u)
+
+
+def _fused_per_r_ref(rb, sb, sc, tc):
+    """rb [hp,u,Cr], sb/sc [hp,gp,u,Cs], tc [gp,Ct] -> [hp,u,Cr] int32."""
+    hp, u, cr = rb.shape
+    _, gp, _, cs = sb.shape
+    _, ct = tc.shape
+    if hp * gp * u * cs * max(cr, ct) <= _FUSE_BATCH_ELEMS:
+        m1 = (sb[..., :, None] == rb[:, None, :, None, :]).astype(jnp.int32)
+        wt = jnp.sum(sc[..., :, None] == tc[None, :, None, None, :], axis=-1)
+        return jnp.einsum("hgusr,hgus->hur", m1, wt).astype(jnp.int32)
+
+    def g_step(acc, ys):
+        sb_j, sc_j, tc_j = ys
+        m1 = (sb_j[..., :, None] == rb[..., None, :]).astype(jnp.int32)
+        wt = jnp.sum(sc_j[..., :, None] == tc_j[None, None, None, :], axis=-1)
+        return acc + jnp.einsum("husr,hus->hur", m1, wt), None
+
+    acc, _ = jax.lax.scan(
+        g_step, jnp.zeros((hp, u, cr), jnp.int32),
+        (sb.transpose(1, 0, 2, 3), sc.transpose(1, 0, 2, 3), tc))
+    return acc
+
+
+def _fused_cyclic_ref(ra, rb, sb, sc, tc, ta):
+    """ra/rb [hp,gp,uh,ug,Cr], sb/sc [gp,fp,ug,Cs], tc/ta [hp,fp,uh,Ct]
+    -> [hp,gp,uh,ug] int32.  Batched over the coarse grid, scanned over f."""
+    hp, gp, uh, ug, cr = ra.shape
+    _, fp, _, cs = sb.shape
+    _, _, _, ct = tc.shape
+
+    def f_step(acc, ys):
+        sb_f, sc_f, tc_f, ta_f = ys      # [gp,ug,Cs], [hp,uh,Ct]
+        def flat(x, shape):
+            return jnp.broadcast_to(x, shape).reshape(
+                (hp * gp * uh * ug,) + x.shape[-1:])
+        s_shape = (hp, gp, uh, ug, cs)
+        t_shape = (hp, gp, uh, ug, ct)
+        c = ref.bucket_count3_cyclic(
+            ra.reshape(-1, cr), rb.reshape(-1, cr),
+            flat(sb_f[None, :, None, :, :], s_shape),
+            flat(sc_f[None, :, None, :, :], s_shape),
+            flat(tc_f[:, None, :, None, :], t_shape),
+            flat(ta_f[:, None, :, None, :], t_shape))
+        return acc + c.reshape(hp, gp, uh, ug), None
+
+    acc, _ = jax.lax.scan(
+        f_step, jnp.zeros((hp, gp, uh, ug), jnp.int32),
+        (sb.transpose(1, 0, 2, 3), sc.transpose(1, 0, 2, 3),
+         tc.transpose(1, 0, 2, 3), ta.transpose(1, 0, 2, 3)))
+    return acc
+
+
+def _fused_star_ref(rb, sb, sc, tc):
+    """rb [uh,Cr], sb/sc [ch,uh,ug,Cs], tc [ug,Ct] -> [uh,ug] int32.
+
+    Same sorted-bucket-probe scheme as ``_fused_linear_ref``: each fact slot
+    probes the R bucket of its row and the T bucket of its column.
+    """
+    uh, cr = rb.shape
+    ch, _, ug, cs = sb.shape
+    _, ct = tc.shape
+    s_by_r = sb.transpose(1, 0, 2, 3).reshape(uh, ch * ug * cs)
+    wr = _bucket_multiplicity(rb, s_by_r)
+    wr = wr.reshape(uh, ch, ug, cs).transpose(1, 0, 2, 3)   # [ch,uh,ug,cs]
+    s_by_t = sc.transpose(2, 0, 1, 3).reshape(ug, ch * uh * cs)
+    wt = _bucket_multiplicity(tc, s_by_t)
+    wt = wt.reshape(ug, ch, uh, cs).transpose(1, 2, 0, 3)   # [ch,uh,ug,cs]
+    return jnp.sum(wr * wt, axis=(0, 3)).astype(jnp.int32)
+
+
+def fused_count3_linear(rb, rv, sb, sc, sv, tc, tv, *,
+                        use_kernel: bool = False):
+    """Fused linear-3 sweep: per-(H, h) bucket counts [hp, u] int32."""
+    rb = _mask(rb, rv, "r")
+    sb = _mask(sb, sv, "s")
+    sc = _mask(sc, sv, "s")
+    tc = _mask(tc, tv, "t")
+    if use_kernel:
+        return bucket_join.fused_count3_linear(
+            _pad_lanes(rb, "r"), _pad_lanes(sb, "s"), _pad_lanes(sc, "s"),
+            _pad_lanes(tc, "t"), interpret=_interpret())
+    return _fused_linear_ref(rb, sb, sc, tc)
+
+
+def fused_per_r_counts(rb, rv, sb, sc, sv, tc, tv, *,
+                       use_kernel: bool = False):
+    """Fused per-R-slot counts [hp, u, Cr] int32 (Example 1 aggregate)."""
+    cr = rb.shape[-1]
+    rb = _mask(rb, rv, "r")
+    sb = _mask(sb, sv, "s")
+    sc = _mask(sc, sv, "s")
+    tc = _mask(tc, tv, "t")
+    if use_kernel:
+        out = bucket_join.fused_per_r_counts(
+            _pad_lanes(rb, "r"), _pad_lanes(sb, "s"), _pad_lanes(sc, "s"),
+            _pad_lanes(tc, "t"), interpret=_interpret())
+        return out[..., :cr]
+    return _fused_per_r_ref(rb, sb, sc, tc)
+
+
+def fused_count3_cyclic(ra, rb, rv, sb, sc, sv, tc, ta, tv, *,
+                        use_kernel: bool = False):
+    """Fused cyclic sweep: per-cell counts [hp, gp, uh, ug] int32."""
+    ra = _mask(ra, rv, "r")
+    rb = _mask(rb, rv, "r")
+    sb = _mask(sb, sv, "s")
+    sc = _mask(sc, sv, "s")
+    tc = _mask(tc, tv, "t")
+    ta = _mask(ta, tv, "t")
+    if use_kernel:
+        return bucket_join.fused_count3_cyclic(
+            _pad_lanes(ra, "r"), _pad_lanes(rb, "r"), _pad_lanes(sb, "s"),
+            _pad_lanes(sc, "s"), _pad_lanes(tc, "t"), _pad_lanes(ta, "t"),
+            interpret=_interpret())
+    return _fused_cyclic_ref(ra, rb, sb, sc, tc, ta)
+
+
+def fused_count3_star(rb, rv, sb, sc, sv, tc, tv, *,
+                      use_kernel: bool = False):
+    """Fused star sweep: per-PMU counts [uh, ug] int32."""
+    rb = _mask(rb, rv, "r")
+    sb = _mask(sb, sv, "s")
+    sc = _mask(sc, sv, "s")
+    tc = _mask(tc, tv, "t")
+    if use_kernel:
+        return bucket_join.fused_count3_star(
+            _pad_lanes(rb, "r"), _pad_lanes(sb, "s"), _pad_lanes(sc, "s"),
+            _pad_lanes(tc, "t"), interpret=_interpret())
+    return _fused_star_ref(rb, sb, sc, tc)
+
+
 @functools.partial(jax.jit, static_argnames=("n_buckets", "use_kernel"))
 def radix_histogram(keys, valid, *, n_buckets: int, use_kernel: bool = False):
     """Histogram of hash_bucket(keys) over live rows."""

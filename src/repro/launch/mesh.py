@@ -19,14 +19,14 @@ from __future__ import annotations
 import jax
 from jax.sharding import Mesh
 
+from repro import compat
 from repro.parallel import sharding as shd
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(max_devices: int | None = None) -> Mesh:

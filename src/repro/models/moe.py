@@ -193,13 +193,13 @@ def moe_mlp_sharded(x, p, cfg, capacity_factor: float = 1.25):
     baxes = (batch_axes if len(batch_axes) > 1
              else (batch_axes[0] if batch_axes else None))
     shared_specs = jax.tree.map(lambda _: P(), p.get("shared", {}))
-    out, aux_loss, dropped = _jax.shard_map(
+    from repro import compat
+    out, aux_loss, dropped = compat.shard_map(
         local, mesh=mesh,
         in_specs=(P(baxes, None, None), P(), P(model_ax, None, None),
                   P(model_ax, None, None), P(model_ax, None, None),
                   shared_specs),
         out_specs=(P(baxes, None, None), P(), P()),
-        check_vma=False,
     )(x, p["router"]["w"], p["gate"], p["up"], p["down"],
       p.get("shared", {}))
     return out, {"aux_loss": aux_loss, "dropped": dropped}

@@ -1,0 +1,87 @@
+"""Deterministic stand-in for `hypothesis` on hermetic images.
+
+The real hypothesis is a dev dependency (``pip install -e .[dev]``, used in
+CI); accelerator images are built offline and may not carry it.  Rather than
+skip the property tests there, ``conftest.py`` installs this shim into
+``sys.modules`` when the import fails.  It implements exactly the subset the
+suite uses — ``@given`` with keyword strategies, ``@settings(max_examples,
+deadline)``, ``st.integers`` / ``st.sampled_from`` / ``st.booleans`` — with
+seeded, reproducible draws (no shrinking, no database).
+"""
+
+from __future__ import annotations
+
+import random
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def _integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def _sampled_from(elements) -> _Strategy:
+    elems = list(elements)
+    return _Strategy(lambda rnd: elems[rnd.randrange(len(elems))])
+
+
+def _booleans() -> _Strategy:
+    return _Strategy(lambda rnd: bool(rnd.getrandbits(1)))
+
+
+def _floats(min_value: float = 0.0, max_value: float = 1.0,
+            **_ignored) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = _integers
+strategies.sampled_from = _sampled_from
+strategies.booleans = _booleans
+strategies.floats = _floats
+
+
+def settings(max_examples: int | None = None, deadline=None, **_ignored):
+    """Records max_examples on the decorated function (applies whether it
+    sits above or below @given)."""
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        # NOTE: no functools.wraps — the wrapper must NOT expose the
+        # wrapped signature, or pytest would resolve the strategy
+        # parameters as fixtures.
+        def wrapper():
+            n = (getattr(wrapper, "_shim_max_examples", None)
+                 or getattr(fn, "_shim_max_examples", None)
+                 or DEFAULT_MAX_EXAMPLES)
+            base = zlib.crc32(fn.__qualname__.encode())
+            for i in range(n):
+                rnd = random.Random(base * 1000003 + i)
+                drawn = {k: s.draw(rnd) for k, s in sorted(strats.items())}
+                fn(**drawn)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+class HealthCheck:
+    """Placeholder so `suppress_health_check=[...]` settings parse."""
+    too_slow = data_too_large = filter_too_much = None

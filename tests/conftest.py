@@ -14,6 +14,16 @@ import pytest
 import sys, pathlib
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
+# Hermetic images may lack hypothesis (a dev dependency); fall back to the
+# bundled deterministic shim so property tests still collect and run.  This
+# must happen in conftest, before pytest imports any test module.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_shim
+    sys.modules["hypothesis"] = _hypothesis_shim
+    sys.modules["hypothesis.strategies"] = _hypothesis_shim.strategies
+
 from repro.core.relation import Relation  # noqa: E402
 
 

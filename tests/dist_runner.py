@@ -80,6 +80,20 @@ def main():
         failures.append(f"star3: got {int(res3.count)} want {want3} "
                         f"ovf {bool(res3.overflowed)}")
 
+    # ---- fused engine locals: one kernel launch per device --------------
+    for kind, rel3, want_k, kw in (
+            ("linear", (r2, s2, t2), want2,
+             dict(local_u=4, local_g=2)),
+            ("cyclic", (r, s, t), want, {}),
+            ("star", (r3, s3, t3), want3, {})):
+        fne = distributed.engine_count_sharded(
+            mesh, "row", "col", kind, shuffle_slack=4.0, local_slack=5.0,
+            **kw)
+        rese = jax.jit(fne)(*map(place, rel3))
+        if bool(rese.overflowed) or int(rese.count) != want_k:
+            failures.append(f"engine {kind}: got {int(rese.count)} "
+                            f"want {want_k} ovf {bool(rese.overflowed)}")
+
     # ---- skew: zipf keys, bigger slack must stay exact ------------------
     r4, rd4 = make_rel(rng, 160, ("a", "b"), 30, zipf=1.5)
     s4, sd4 = make_rel(rng, 160, ("b", "c"), 30, zipf=1.5)

@@ -1,0 +1,253 @@
+"""MultiwayJoinEngine: fused sweeps vs scan drivers vs kernels/ref.py,
+plus the skew-recovery guarantee (exact counts, no residual overflow)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import cyclic3, driver, engine, linear3, planner, star3
+from repro.core.relation import Relation
+from repro.kernels import ops as kops
+from conftest import (make_rel, oracle_cyclic3_count, oracle_linear3_count,
+                      oracle_linear3_per_r)
+
+
+def _ref_linear_count(rb, sb, sc, tc) -> int:
+    """Single-bucket kernels/ref.py oracle (everything in one PMU)."""
+    c = kops.bucket_count3_linear(
+        jnp.asarray(rb)[None, :], jnp.ones((1, len(rb)), bool),
+        jnp.asarray(sb)[None, :], jnp.asarray(sc)[None, :],
+        jnp.ones((1, len(sb)), bool),
+        jnp.asarray(tc)[None, :], jnp.ones((1, len(tc)), bool))
+    return int(c[0])
+
+
+def _ref_cyclic_count(ra, rb, sb, sc, tc, ta) -> int:
+    c = kops.bucket_count3_cyclic(
+        jnp.asarray(ra)[None, :], jnp.asarray(rb)[None, :],
+        jnp.ones((1, len(ra)), bool),
+        jnp.asarray(sb)[None, :], jnp.asarray(sc)[None, :],
+        jnp.ones((1, len(sb)), bool),
+        jnp.asarray(tc)[None, :], jnp.asarray(ta)[None, :],
+        jnp.ones((1, len(tc)), bool))
+    return int(c[0])
+
+
+def _skewed(rng, n, d, heavy_frac, heavy_key=1):
+    """Adversarial keys: a heavy hitter owning `heavy_frac` of all rows (a
+    single hash bucket must absorb it — no salt can spread one key)."""
+    n_heavy = int(n * heavy_frac)
+    vals = np.concatenate([
+        np.full(n_heavy, heavy_key, np.int32),
+        rng.integers(0, d, size=n - n_heavy).astype(np.int32)])
+    rng.shuffle(vals)
+    return vals
+
+
+# --------------------------------------------------------------------------
+# fused sweep == scan driver (same plan, same layouts)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(3, 80),
+       u=st.sampled_from([2, 4, 8]))
+def test_linear_fused_matches_scan(seed, d, u):
+    rng = np.random.default_rng(seed)
+    r, rd = make_rel(rng, 150, ("a", "b"), d)
+    s, sd = make_rel(rng, 180, ("b", "c"), d)
+    t, td = make_rel(rng, 160, ("c", "d"), d)
+    plan = linear3.default_plan(150, 180, 160, m_budget=64, u=u)
+    res_scan, grown = driver.linear3_count_auto(r, s, t, plan)
+    res_fused = engine.linear3_count_fused(r, s, t, grown)
+    assert int(res_fused.count) == int(res_scan.count)
+    assert not bool(res_fused.overflowed)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(3, 60))
+def test_cyclic_fused_matches_scan(seed, d):
+    rng = np.random.default_rng(seed)
+    r, _ = make_rel(rng, 140, ("a", "b"), d)
+    s, _ = make_rel(rng, 150, ("b", "c"), d)
+    t, _ = make_rel(rng, 130, ("c", "a"), d)
+    plan = cyclic3.default_plan(140, 150, 130, m_budget=64, uh=4, ug=2)
+    res_scan, grown = driver.cyclic3_count_auto(r, s, t, plan)
+    res_fused = engine.cyclic3_count_fused(r, s, t, grown)
+    assert int(res_fused.count) == int(res_scan.count)
+    assert not bool(res_fused.overflowed)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(3, 60),
+       chunks=st.sampled_from([1, 2, 4]))
+def test_star_fused_matches_scan(seed, d, chunks):
+    rng = np.random.default_rng(seed)
+    r, _ = make_rel(rng, 60, ("a", "b"), d)
+    s, _ = make_rel(rng, 400, ("b", "c"), d)
+    t, _ = make_rel(rng, 70, ("c", "d"), d)
+    plan = star3.default_plan(60, 400, 70, uh=4, ug=4, chunks=chunks)
+    res_scan, grown = driver.star3_count_auto(r, s, t, plan)
+    res_fused = engine.star3_count_fused(r, s, t, grown)
+    assert int(res_fused.count) == int(res_scan.count)
+    assert not bool(res_fused.overflowed)
+
+
+def test_fused_pallas_kernels_match_jnp(rng):
+    """The fused Pallas grid kernels (interpret mode) and the fused jnp
+    paths are the same function."""
+    r, _ = make_rel(rng, 120, ("a", "b"), 30)
+    s, _ = make_rel(rng, 140, ("b", "c"), 30)
+    t, _ = make_rel(rng, 130, ("c", "d"), 30)
+    plan = linear3.default_plan(120, 140, 130, m_budget=48, u=4, slack=4.0)
+    rg, sg, tg = engine.linear3_layouts(r, s, t, plan)
+    a = kops.fused_count3_linear(rg.columns["b"], rg.valid, sg.columns["b"],
+                                 sg.columns["c"], sg.valid, tg.columns["c"],
+                                 tg.valid, use_kernel=False)
+    b = kops.fused_count3_linear(rg.columns["b"], rg.valid, sg.columns["b"],
+                                 sg.columns["c"], sg.valid, tg.columns["c"],
+                                 tg.valid, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    pa = kops.fused_per_r_counts(rg.columns["b"], rg.valid, sg.columns["b"],
+                                 sg.columns["c"], sg.valid, tg.columns["c"],
+                                 tg.valid, use_kernel=False)
+    pb = kops.fused_per_r_counts(rg.columns["b"], rg.valid, sg.columns["b"],
+                                 sg.columns["c"], sg.valid, tg.columns["c"],
+                                 tg.valid, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+
+
+# --------------------------------------------------------------------------
+# skew recovery: adversarial keys, exact counts, overflowed == False
+# --------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       heavy_frac=st.sampled_from([0.3, 0.5, 0.7]),
+       d=st.integers(8, 60))
+def test_linear_skew_recovery_exact(seed, heavy_frac, d):
+    """A heavy-hitter join key overflows any uniform plan (one bucket must
+    hold every copy); the engine must still return the kernels/ref.py
+    reference count exactly, with no residual overflow flag."""
+    rng = np.random.default_rng(seed)
+    rb = _skewed(rng, 200, d, heavy_frac)
+    sb = _skewed(rng, 220, d, heavy_frac)
+    sc = _skewed(rng, 220, d, heavy_frac, heavy_key=2)
+    tc = _skewed(rng, 210, d, heavy_frac, heavy_key=2)
+    r = Relation.from_arrays(a=rng.integers(0, 999, 200).astype(np.int32),
+                             b=rb)
+    s = Relation.from_arrays(b=sb, c=sc)
+    t = Relation.from_arrays(c=tc,
+                             d=rng.integers(0, 999, 210).astype(np.int32))
+    want = _ref_linear_count(rb, sb, sc, tc)
+    plan = linear3.default_plan(200, 220, 210, m_budget=64, u=4, slack=1.2)
+    res = engine.MultiwayJoinEngine("linear").count(r, s, t, plan)
+    assert int(res.count) == want
+    assert not bool(res.overflowed)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       heavy_frac=st.sampled_from([0.3, 0.6]))
+def test_cyclic_skew_recovery_exact(seed, heavy_frac):
+    rng = np.random.default_rng(seed)
+    ra, rb = _skewed(rng, 160, 30, heavy_frac), _skewed(rng, 160, 30,
+                                                        heavy_frac, 3)
+    sb, sc = _skewed(rng, 170, 30, heavy_frac, 3), _skewed(rng, 170, 30,
+                                                           heavy_frac, 5)
+    tc, ta = _skewed(rng, 150, 30, heavy_frac, 5), _skewed(rng, 150, 30,
+                                                           heavy_frac)
+    r = Relation.from_arrays(a=ra, b=rb)
+    s = Relation.from_arrays(b=sb, c=sc)
+    t = Relation.from_arrays(c=tc, a=ta)
+    want = _ref_cyclic_count(ra, rb, sb, sc, tc, ta)
+    plan = cyclic3.default_plan(160, 170, 150, m_budget=48, uh=2, ug=2,
+                                slack=1.2)
+    res = engine.MultiwayJoinEngine("cyclic").count(r, s, t, plan)
+    assert int(res.count) == want
+    assert not bool(res.overflowed)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       heavy_frac=st.sampled_from([0.4, 0.7]))
+def test_star_skew_recovery_exact(seed, heavy_frac):
+    """Skewed FACT keys: most of S routes to one PMU cell."""
+    rng = np.random.default_rng(seed)
+    r, rd = make_rel(rng, 60, ("a", "b"), 25)
+    sb = _skewed(rng, 400, 25, heavy_frac, heavy_key=7)
+    sc = _skewed(rng, 400, 25, heavy_frac, heavy_key=9)
+    s = Relation.from_arrays(b=sb, c=sc)
+    t, td = make_rel(rng, 70, ("c", "d"), 25)
+    want = _ref_linear_count(rd["b"], sb, sc, td["c"])
+    plan = star3.default_plan(60, 400, 70, uh=4, ug=4, chunks=2, slack=1.2)
+    res = engine.MultiwayJoinEngine("star").count(r, s, t, plan)
+    assert int(res.count) == want
+    assert not bool(res.overflowed)
+
+
+def test_linear_zipf_recovery_exact(rng):
+    """The seed suite's zipf scenario, now recovered by the engine without
+    whole-query capacity retries."""
+    r, rd = make_rel(rng, 200, ("a", "b"), 50, zipf=1.4)
+    s, sd = make_rel(rng, 220, ("b", "c"), 50, zipf=1.4)
+    t, td = make_rel(rng, 210, ("c", "d"), 50, zipf=1.4)
+    want = oracle_linear3_count(rd["b"], sd["b"], sd["c"], td["c"])
+    plan = linear3.default_plan(200, 220, 210, m_budget=64, u=4, slack=1.2)
+    res = driver.engine_count("linear", r, s, t, plan)
+    assert int(res.count) == want
+    assert not bool(res.overflowed)
+
+
+def test_per_r_skew_recovery_exact(rng):
+    """Per-R aggregates survive recovery: group-by over the concatenated
+    round outputs equals the oracle."""
+    rb = _skewed(rng, 180, 40, 0.5)
+    r = Relation.from_arrays(a=rng.integers(0, 99, 180).astype(np.int32),
+                             b=rb)
+    rd_a = np.asarray(r.col("a"))
+    s, sd = make_rel(rng, 200, ("b", "c"), 40, zipf=1.3)
+    t, td = make_rel(rng, 190, ("c", "d"), 40, zipf=1.3)
+    plan = linear3.default_plan(180, 200, 190, m_budget=64, u=4, slack=1.2)
+    res = driver.engine_per_r_counts(r, s, t, plan)
+    assert not bool(res.overflowed)
+    from collections import defaultdict
+    got = defaultdict(int)
+    for k, c, v in zip(np.asarray(res.keys), np.asarray(res.counts),
+                       np.asarray(res.valid)):
+        if v:
+            got[int(k)] += int(c)
+    per = oracle_linear3_per_r(rb, sd["b"], sd["c"], td["c"])
+    want = defaultdict(int)
+    for a, c in zip(rd_a, per):
+        want[int(a)] += int(c)
+    assert dict(got) == dict(want)
+
+
+# --------------------------------------------------------------------------
+# planner: executable engine plans
+# --------------------------------------------------------------------------
+
+def test_planner_engine_plan_runs(rng):
+    r, rd = make_rel(rng, 150, ("a", "b"), 37)
+    s, sd = make_rel(rng, 180, ("b", "c"), 37)
+    t, td = make_rel(rng, 160, ("c", "d"), 37)
+    want = oracle_linear3_count(rd["b"], sd["b"], sd["c"], td["c"])
+    ep = planner.plan_query("linear", 150, 180, 160, 37, m_budget=48, u=4)
+    assert ep.strategy in ("3way", "cascade")
+    res = ep.run(r, s, t)
+    assert int(res.count) == want
+
+
+def test_planner_cyclic_always_3way(rng):
+    r, rd = make_rel(rng, 140, ("a", "b"), 31)
+    s, sd = make_rel(rng, 150, ("b", "c"), 31)
+    t, td = make_rel(rng, 130, ("c", "a"), 31)
+    want = oracle_cyclic3_count(rd["a"], rd["b"], sd["b"], sd["c"],
+                                td["c"], td["a"])
+    ep = planner.plan_query("cyclic", 140, 150, 130, 31, m_budget=64,
+                            uh=4, ug=2)
+    assert ep.strategy == "3way"
+    res = ep.run(r, s, t)
+    assert int(res.count) == want
+    assert res.rounds >= 1
