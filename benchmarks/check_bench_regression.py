@@ -1,0 +1,70 @@
+"""Regression gate for BENCH_engine.json: compare a fresh run against the
+committed baseline and fail on a >20% slowdown.
+
+CI runners vary wildly in absolute wall-clock, so the gated metric is each
+shape's *speedup ratio* (scan driver vs fused engine, measured back-to-back
+on the same machine in the same process) — it self-normalizes for machine
+speed while still catching real regressions in the fused hot path (a 20%
+drop in speedup means the fused side got ~20% slower relative to the
+untouched scan baseline).  Counts must also still match exactly.
+
+The ratio normalizes machine SPEED, not relative op costs: if a runner
+class proves systematically cheaper/dearer on the gather-heavy pair-index
+path than the machine that produced the committed baseline, regenerate
+BENCH_engine.json on that runner class (or raise --tolerance) rather than
+letting the gate flap.
+
+    python benchmarks/check_bench_regression.py \
+        --baseline BENCH_engine.json.committed --new BENCH_engine.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+TOLERANCE = 0.20  # fail when speedup drops more than this fraction
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_engine.json (pre-run copy)")
+    ap.add_argument("--new", required=True,
+                    help="freshly produced BENCH_engine.json")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE)
+    args = ap.parse_args()
+
+    base = json.loads(pathlib.Path(args.baseline).read_text())
+    new = json.loads(pathlib.Path(args.new).read_text())
+    failures = []
+    for name, b in base.get("shapes", {}).items():
+        n = new.get("shapes", {}).get(name)
+        if n is None:
+            failures.append(f"{name}: shape missing from new run")
+            continue
+        if not n.get("match", False):
+            failures.append(f"{name}: fused/scan counts diverged")
+            continue
+        floor = b["speedup"] * (1.0 - args.tolerance)
+        status = "OK " if n["speedup"] >= floor else "REG"
+        print(f"  [{status}] {name}: speedup {b['speedup']:.2f}x -> "
+              f"{n['speedup']:.2f}x (floor {floor:.2f}x)")
+        if n["speedup"] < floor:
+            failures.append(
+                f"{name}: speedup regressed {b['speedup']:.2f}x -> "
+                f"{n['speedup']:.2f}x (> {args.tolerance:.0%} slowdown)")
+    # NOTE: the claim_* booleans in the JSON are a record, not a gate here —
+    # the per-shape speedup-ratio floor above is the regression signal
+    # (absolute claim thresholds re-checked on a noisy runner would flap).
+    if failures:
+        print("BENCH REGRESSION:\n  " + "\n  ".join(failures))
+        return 1
+    print("bench regression gate: all shapes within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

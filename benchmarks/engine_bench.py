@@ -71,6 +71,11 @@ def bench_linear(rng, n, d, m_budget, u, repeats):
 
 
 def bench_cyclic(rng, n, d, m_budget, repeats):
+    """Cyclic (triangle) query: the fused path now probes a sorted
+    (c, a)-pair index of T (searchsorted range scans) instead of the
+    all-pairs contraction — the backend that unsticks the ~1x cyclic CPU
+    number.  Both the pair-index and the all-pairs fused variants are
+    timed against the scan driver."""
     r = _rel(rng, n, ("a", "b"), d)
     s = _rel(rng, n, ("b", "c"), d)
     t = _rel(rng, n, ("c", "a"), d)
@@ -79,13 +84,20 @@ def bench_cyclic(rng, n, d, m_budget, repeats):
     scan_fn = jax.jit(lambda a, b, c: cyclic3.cyclic3_count(a, b, c, plan))
     fused_fn = jax.jit(
         lambda a, b, c: engine.cyclic3_count_fused(a, b, c, plan))
+    allpairs_fn = jax.jit(
+        lambda a, b, c: engine.cyclic3_count_fused(a, b, c, plan,
+                                                   pair_index=False))
     scan_ms = _time(scan_fn, r, s, t, repeats=repeats)
     fused_ms = _time(fused_fn, r, s, t, repeats=repeats)
+    allpairs_ms = _time(allpairs_fn, r, s, t, repeats=repeats)
     c0, c1 = int(scan_fn(r, s, t).count), int(fused_fn(r, s, t).count)
+    c2 = int(allpairs_fn(r, s, t).count)
     return {"n": n, "d": d, "h_parts": plan.h_parts, "g_parts": plan.g_parts,
             "f_parts": plan.f_parts, "scan_ms": scan_ms,
-            "fused_ms": fused_ms, "speedup": scan_ms / fused_ms,
-            "count_scan": c0, "count_fused": c1, "match": c0 == c1}
+            "fused_ms": fused_ms, "fused_allpairs_ms": allpairs_ms,
+            "speedup": scan_ms / fused_ms,
+            "count_scan": c0, "count_fused": c1,
+            "match": c0 == c1 == c2}
 
 
 def bench_star(rng, n_dim, n_fact, d, chunks, repeats):
@@ -139,7 +151,13 @@ def main():
               f"speedup {row['speedup']:.2f}x, match={row['match']}")
 
     best = max(s["speedup"] for s in shapes.values())
+    cyc = shapes["cyclic_triangles"]["speedup"]
     ok = best >= 2.0 and all(s["match"] for s in shapes.values())
+    # the exit gate uses a noise-tolerant 2x floor (shared CI runners
+    # jitter); the measured value and the 3x claim go in the JSON record,
+    # and check_bench_regression.py guards the trajectory against the
+    # committed baseline ratio
+    cyc_ok = cyc >= 2.0
     report = {
         "backend": jax.default_backend(),
         "quick": bool(args.quick),
@@ -150,11 +168,17 @@ def main():
             "detail": "fused engine >= 2x over scan driver on at least one "
                       "Fig 4 shape, counts exactly equal",
         },
+        "claim_cyclic_pairidx_ge_3x": {
+            "ok": cyc >= 3.0, "speedup": cyc,
+            "detail": "cyclic fused path with the sorted (c,a)-pair-index "
+                      "backend >= 3x over the cyclic scan driver",
+        },
     }
     OUT.write_text(json.dumps(report, indent=2))
-    print(f"[{'PASS' if ok else 'FAIL'}] best fused speedup {best:.2f}x "
+    print(f"[{'PASS' if ok else 'FAIL'}] best fused speedup {best:.2f}x; "
+          f"[{'PASS' if cyc_ok else 'FAIL'}] cyclic pair-index {cyc:.2f}x "
           f"-> {OUT}")
-    return 0 if ok else 1
+    return 0 if (ok and cyc_ok) else 1
 
 
 if __name__ == "__main__":

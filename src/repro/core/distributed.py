@@ -17,6 +17,21 @@ partitioning the paper configures the accelerator to perform first (§4).
 Everything is static-shape: the shuffles use fixed-capacity per-destination
 send buffers, and overflow is psum-reduced and reported, never hidden.
 
+Cross-device skew recovery
+--------------------------
+``engine_count_sharded`` extends the fused one-shot joins with the same
+round contract as ``core.recovery``, lifted to the mesh: each round is ONE
+shard_map launch whose devices join their shard with a salted local plan and
+``lax.psum``-merge the partial counts of overflow-free devices (the "kept
+exact partials"); the per-device overflow bitmap comes back as a
+``P(row, col)`` output.  The host masks the driving relation's rows down to
+the overflowed devices (their mesh position is a pure function of the join
+keys — no data movement) and re-runs only those across the whole mesh with
+grown capacities and a fresh salt.  The final round sizes every shuffle
+buffer to accept-all and every local bucket from its exact host-side
+histogram, so it cannot overflow: ``overflowed == False`` is a guarantee,
+not a flag.
+
 The same functions compile on the 2-pod production mesh: the "pod" axis is
 folded into "row" (joins scale out along rows; the extra hop is the paper's
 multi-chip case, and the collective-term roofline in EXPERIMENTS.md
@@ -25,22 +40,29 @@ quantifies it).
 
 from __future__ import annotations
 
-import functools
+import math
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core import cyclic3, engine, hashing, linear3, partition, star3
+from repro.core.recovery import exact_cap
 from repro.core.relation import Relation
-from repro.kernels import ops as kops
 
 
 class DistJoinResult(NamedTuple):
     count: jnp.ndarray       # () int32, global
     overflowed: jnp.ndarray  # () bool, any shuffle/bucket overflow anywhere
+
+
+class DistEngineResult(NamedTuple):
+    count: np.int64          # exact global count (int64)
+    overflowed: jnp.ndarray  # () bool — False by construction
+    rounds: int              # shard_map rounds executed (1 = no skew)
 
 
 # --------------------------------------------------------------------------
@@ -94,41 +116,44 @@ def _psum_bool(x: jnp.ndarray, axes) -> jnp.ndarray:
     return jax.lax.psum(x.astype(jnp.int32), axes) > 0
 
 
+def _scaled(cap: int, scale: float, align: int = 8) -> int:
+    if scale == 1.0:
+        return cap
+    return max(align, int(math.ceil(cap * scale / align)) * align)
+
+
 # --------------------------------------------------------------------------
-# distributed cyclic 3-way join (the paper's grid algorithm, §5.1)
+# per-kind local cores: shuffles + local fused/scan join on one device.
+# Each returns (local count, local join overflow, shuffle overflow) so both
+# the legacy one-shot wrappers and the recovery rounds can share them.
 # --------------------------------------------------------------------------
 
-def cyclic3_count_sharded(mesh: Mesh, row: str, col: str,
-                          *, shuffle_slack: float = 3.0,
-                          local_uh: int = 4, local_ug: int = 4,
-                          local_f: int = 2, local_slack: float = 3.0,
-                          use_kernel: bool = False, fused: bool = False):
-    """Build a jit-able distributed triangle-count:  f(R, S, T) -> result.
-
-    R(a,b), S(b,c), T(c,a) arrive sharded in arrival order over the whole
-    mesh (PartitionSpec((row, col)) on every column).  Device (i, j) ends up
-    owning R tuples with (H(a), G(b)) == (i, j), the full S_j column
-    partition and the full T_i row partition — exactly Fig 3.
-    """
-    nrow = mesh.shape[row]
-    ncol = mesh.shape[col]
+def _cyclic_local_core(nrow, ncol, row, col, *, shuffle_slack=3.0,
+                       local_uh=4, local_ug=4, local_f=2, local_slack=3.0,
+                       use_kernel=False, fused=False, salt=0, cap_scale=1.0,
+                       shuffle_caps=None, local_caps=None, pair_index=True):
+    """R(a,b), S(b,c), T(c,a) arrive sharded in arrival order; device (i, j)
+    ends up owning R tuples with (H(a), G(b)) == (i, j), the full S_j column
+    partition and the full T_i row partition — exactly Fig 3."""
+    sc = shuffle_caps or {}
 
     def local(r_cols, r_valid, s_cols, s_valid, t_cols, t_valid):
         # --- R → cell (H(a), G(b)): two-phase all_to_all ----------------
-        cap_r = partition.suggest_capacity(
+        cap_r = sc.get("r1") or partition.suggest_capacity(
             r_valid.shape[0], nrow, shuffle_slack)
         r1, rv1, ovf_r1 = _shuffle(r_cols, r_valid, "a", row, nrow, cap_r, "H")
-        cap_r2 = partition.suggest_capacity(rv1.shape[0], ncol, shuffle_slack)
+        cap_r2 = sc.get("r2") or partition.suggest_capacity(
+            rv1.shape[0], ncol, shuffle_slack)
         r2, rv2, ovf_r2 = _shuffle(r1, rv1, "b", col, ncol, cap_r2, "G")
 
         # --- S → column G(b), replicated down the column ----------------
-        cap_s = partition.suggest_capacity(
+        cap_s = sc.get("s1") or partition.suggest_capacity(
             s_valid.shape[0], ncol, shuffle_slack)
         s1, sv1, ovf_s = _shuffle(s_cols, s_valid, "b", col, ncol, cap_s, "G")
         s2, sv2 = _replicate(s1, sv1, row)
 
         # --- T → row H(a), replicated across the row --------------------
-        cap_t = partition.suggest_capacity(
+        cap_t = sc.get("t1") or partition.suggest_capacity(
             t_valid.shape[0], nrow, shuffle_slack)
         t1, tv1, ovf_t = _shuffle(t_cols, t_valid, "a", row, nrow, cap_t, "H")
         t2, tv2 = _replicate(t1, tv1, col)
@@ -137,72 +162,51 @@ def cyclic3_count_sharded(mesh: Mesh, row: str, col: str,
         rl = Relation(r2, rv2)
         sl = Relation(s2, sv2)
         tl = Relation(t2, tv2)
+        caps = local_caps or (
+            _scaled(partition.suggest_capacity(
+                rl.capacity, local_uh * local_ug, local_slack), cap_scale),
+            _scaled(partition.suggest_capacity(
+                sl.capacity, local_f * local_ug, local_slack), cap_scale),
+            _scaled(partition.suggest_capacity(
+                tl.capacity, local_f * local_uh, local_slack), cap_scale))
         plan = cyclic3.Cyclic3Plan(
             h_parts=1, g_parts=1, uh=local_uh, ug=local_ug, f_parts=local_f,
-            r_cap=partition.suggest_capacity(
-                rl.capacity, local_uh * local_ug, local_slack),
-            s_cap=partition.suggest_capacity(
-                sl.capacity, local_f * local_ug, local_slack),
-            t_cap=partition.suggest_capacity(
-                tl.capacity, local_f * local_uh, local_slack))
+            r_cap=caps[0], s_cap=caps[1], t_cap=caps[2])
         if fused:
             res = engine.cyclic3_count_fused(rl, sl, tl, plan,
-                                             use_kernel=use_kernel)
+                                             use_kernel=use_kernel,
+                                             salt=salt,
+                                             pair_index=pair_index)
         else:
             res = cyclic3.cyclic3_count(rl, sl, tl, plan,
                                         use_kernel=use_kernel)
+        return res.count, res.overflowed, ovf_r1 | ovf_r2 | ovf_s | ovf_t
 
-        count = jax.lax.psum(res.count, (row, col))
-        ovf = _psum_bool(ovf_r1 | ovf_r2 | ovf_s | ovf_t | res.overflowed,
-                         (row, col))
-        return count, ovf
-
-    spec = P((row, col))
-
-    def fn(r: Relation, s: Relation, t: Relation) -> DistJoinResult:
-        sm = compat.shard_map(
-            lambda rc, rv, sc, sv, tc, tv: local(rc, rv, sc, sv, tc, tv),
-            mesh=mesh,
-            in_specs=(spec,) * 6,
-            out_specs=(P(), P()))
-        count, ovf = sm(dict(r.columns), r.valid, dict(s.columns), s.valid,
-                        dict(t.columns), t.valid)
-        return DistJoinResult(count, ovf)
-
-    return fn
+    return local
 
 
-# --------------------------------------------------------------------------
-# distributed linear 3-way join (§4, Algorithm 1 on the mesh)
-# --------------------------------------------------------------------------
-
-def linear3_count_sharded(mesh: Mesh, row: str, col: str,
-                          *, shuffle_slack: float = 3.0,
-                          local_u: int = 8, local_g: int = 4,
-                          local_slack: float = 3.0,
-                          use_kernel: bool = False, fused: bool = False):
+def _linear_local_core(nrow, ncol, row, col, *, shuffle_slack=3.0,
+                       local_u=8, local_g=4, local_slack=3.0,
+                       use_kernel=False, fused=False, salt=0, cap_scale=1.0,
+                       shuffle_caps=None, local_caps=None):
     """Distributed Algorithm 1: the whole mesh is the flat U-way PMU grid.
-
     R and S shuffle to device h(B) (two-phase: row then col hash of B);
-    T is broadcast to every device (all_gather over both axes) — the
-    |R||T|/M term of the cost model becomes the T all-gather bytes, which
-    the roofline's collective term measures.  Call once per coarse H(B)
-    partition when R exceeds aggregate device memory.
-    """
-    nrow = mesh.shape[row]
-    ncol = mesh.shape[col]
+    T is broadcast to every device."""
+    sc = shuffle_caps or {}
 
     def local(r_cols, r_valid, s_cols, s_valid, t_cols, t_valid):
-        cap_r = partition.suggest_capacity(r_valid.shape[0], nrow,
-                                           shuffle_slack)
+        cap_r = sc.get("r1") or partition.suggest_capacity(
+            r_valid.shape[0], nrow, shuffle_slack)
         r1, rv1, ovf_r1 = _shuffle(r_cols, r_valid, "b", row, nrow, cap_r, "H")
-        cap_r2 = partition.suggest_capacity(rv1.shape[0], ncol, shuffle_slack)
+        cap_r2 = sc.get("r2") or partition.suggest_capacity(
+            rv1.shape[0], ncol, shuffle_slack)
         r2, rv2, ovf_r2 = _shuffle(r1, rv1, "b", col, ncol, cap_r2, "G")
 
-        cap_s = partition.suggest_capacity(s_valid.shape[0], nrow,
-                                           shuffle_slack)
+        cap_s = sc.get("s1") or partition.suggest_capacity(
+            s_valid.shape[0], nrow, shuffle_slack)
         s1, sv1, ovf_s1 = _shuffle(s_cols, s_valid, "b", row, nrow, cap_s, "H")
-        cap_s2 = partition.suggest_capacity(sv1.shape[0], ncol, shuffle_slack)
+        cap_s2 = sc.get("s2") or partition.suggest_capacity(
+            sv1.shape[0], ncol, shuffle_slack)
         s2, sv2, ovf_s2 = _shuffle(s1, sv1, "b", col, ncol, cap_s2, "G")
 
         # T broadcast to all devices (streamed bucket-by-bucket locally)
@@ -212,96 +216,101 @@ def linear3_count_sharded(mesh: Mesh, row: str, col: str,
         rl = Relation(r2, rv2)
         sl = Relation(s2, sv2)
         tl = Relation(t2, tv2)
-        plan = linear3.Linear3Plan(
-            h_parts=1, u=local_u, g_parts=local_g,
-            r_cap=partition.suggest_capacity(rl.capacity, local_u,
-                                             local_slack),
-            s_cap=partition.suggest_capacity(sl.capacity,
-                                             local_g * local_u, local_slack),
-            t_cap=partition.suggest_capacity(tl.capacity, local_g,
-                                             local_slack))
+        caps = local_caps or (
+            _scaled(partition.suggest_capacity(
+                rl.capacity, local_u, local_slack), cap_scale),
+            _scaled(partition.suggest_capacity(
+                sl.capacity, local_g * local_u, local_slack), cap_scale),
+            _scaled(partition.suggest_capacity(
+                tl.capacity, local_g, local_slack), cap_scale))
+        plan = linear3.Linear3Plan(h_parts=1, u=local_u, g_parts=local_g,
+                                   r_cap=caps[0], s_cap=caps[1],
+                                   t_cap=caps[2])
         if fused:
             res = engine.linear3_count_fused(rl, sl, tl, plan,
-                                             use_kernel=use_kernel)
+                                             use_kernel=use_kernel, salt=salt)
         else:
             res = linear3.linear3_count(rl, sl, tl, plan,
                                         use_kernel=use_kernel)
-        count = jax.lax.psum(res.count, (row, col))
-        ovf = _psum_bool(ovf_r1 | ovf_r2 | ovf_s1 | ovf_s2 | res.overflowed,
-                         (row, col))
-        return count, ovf
+        return res.count, res.overflowed, ovf_r1 | ovf_r2 | ovf_s1 | ovf_s2
 
-    spec = P((row, col))
-
-    def fn(r: Relation, s: Relation, t: Relation) -> DistJoinResult:
-        sm = compat.shard_map(
-            local, mesh=mesh, in_specs=(spec,) * 6, out_specs=(P(), P()))
-        count, ovf = sm(dict(r.columns), r.valid, dict(s.columns), s.valid,
-                        dict(t.columns), t.valid)
-        return DistJoinResult(count, ovf)
-
-    return fn
+    return local
 
 
-# --------------------------------------------------------------------------
-# distributed star 3-way join (§6.5)
-# --------------------------------------------------------------------------
-
-def star3_count_sharded(mesh: Mesh, row: str, col: str,
-                        *, shuffle_slack: float = 3.0,
-                        local_chunks: int = 1, local_slack: float = 3.0,
-                        use_kernel: bool = False, fused: bool = False):
+def _star_local_core(nrow, ncol, row, col, *, shuffle_slack=3.0,
+                     local_chunks=1, local_slack=3.0, use_kernel=False,
+                     fused=False, salt=0, cap_scale=1.0, shuffle_caps=None,
+                     local_caps=None, local_uh=4, local_ug=4):
     """Distributed star join: R pinned by h(B) on rows (replicated along
     cols), T pinned by g(C) on cols (replicated along rows); each fact tuple
-    s(b,c) is routed to exactly the one device (h(b), g(c)) — S crosses the
-    network once, R and T are the only replicated (small) relations."""
-    nrow = mesh.shape[row]
-    ncol = mesh.shape[col]
+    s(b,c) is routed to exactly the one device (h(b), g(c))."""
+    sc = shuffle_caps or {}
 
     def local(r_cols, r_valid, s_cols, s_valid, t_cols, t_valid):
-        # dimensions: shuffle to their axis position, replicate along other
-        cap_r = partition.suggest_capacity(r_valid.shape[0], nrow,
-                                           shuffle_slack)
-        r1, rv1, ovf_r = _shuffle(r_cols, r_valid, "b", row, nrow, cap_r, "h")
+        # routing uses the coarse H/G families, NOT the local layout's
+        # h/g: with a shared family (and salt 0 in round 0) device-local
+        # buckets would be modulo-correlated with device placement,
+        # leaving most local buckets empty and the loaded ones ~uh x over
+        cap_r = sc.get("r1") or partition.suggest_capacity(
+            r_valid.shape[0], nrow, shuffle_slack)
+        r1, rv1, ovf_r = _shuffle(r_cols, r_valid, "b", row, nrow, cap_r, "H")
         r2, rv2 = _replicate(r1, rv1, col)
 
-        cap_t = partition.suggest_capacity(t_valid.shape[0], ncol,
-                                           shuffle_slack)
-        t1, tv1, ovf_t = _shuffle(t_cols, t_valid, "c", col, ncol, cap_t, "g")
+        cap_t = sc.get("t1") or partition.suggest_capacity(
+            t_valid.shape[0], ncol, shuffle_slack)
+        t1, tv1, ovf_t = _shuffle(t_cols, t_valid, "c", col, ncol, cap_t, "G")
         t2, tv2 = _replicate(t1, tv1, row)
 
-        # fact: two-phase point routing (h(b) row, then g(c) col)
-        cap_s = partition.suggest_capacity(s_valid.shape[0], nrow,
-                                           shuffle_slack)
-        s1, sv1, ovf_s1 = _shuffle(s_cols, s_valid, "b", row, nrow, cap_s, "h")
-        cap_s2 = partition.suggest_capacity(sv1.shape[0], ncol, shuffle_slack)
-        s2, sv2, ovf_s2 = _shuffle(s1, sv1, "c", col, ncol, cap_s2, "g")
+        # fact: two-phase point routing (H(b) row, then G(c) col)
+        cap_s = sc.get("s1") or partition.suggest_capacity(
+            s_valid.shape[0], nrow, shuffle_slack)
+        s1, sv1, ovf_s1 = _shuffle(s_cols, s_valid, "b", row, nrow, cap_s, "H")
+        cap_s2 = sc.get("s2") or partition.suggest_capacity(
+            sv1.shape[0], ncol, shuffle_slack)
+        s2, sv2, ovf_s2 = _shuffle(s1, sv1, "c", col, ncol, cap_s2, "G")
 
         rl = Relation(r2, rv2)
         sl = Relation(s2, sv2)
         tl = Relation(t2, tv2)
-        # local PMU grid: 1×1 coarse, uh×ug fine handled by star3 itself
-        plan = star3.Star3Plan(
-            uh=4, ug=4, chunks=local_chunks,
-            r_cap=partition.suggest_capacity(rl.capacity, 4, local_slack),
-            s_cap=partition.suggest_capacity(sl.capacity,
-                                             local_chunks * 16, local_slack),
-            t_cap=partition.suggest_capacity(tl.capacity, 4, local_slack))
+        caps = local_caps or (
+            _scaled(partition.suggest_capacity(
+                rl.capacity, local_uh, local_slack), cap_scale),
+            _scaled(partition.suggest_capacity(
+                sl.capacity, local_chunks * local_uh * local_ug,
+                local_slack), cap_scale),
+            _scaled(partition.suggest_capacity(
+                tl.capacity, local_ug, local_slack), cap_scale))
+        plan = star3.Star3Plan(uh=local_uh, ug=local_ug, chunks=local_chunks,
+                               r_cap=caps[0], s_cap=caps[1], t_cap=caps[2])
         if fused:
             res = engine.star3_count_fused(rl, sl, tl, plan,
-                                           use_kernel=use_kernel)
+                                           use_kernel=use_kernel, salt=salt)
         else:
             res = star3.star3_count(rl, sl, tl, plan, use_kernel=use_kernel)
-        count = jax.lax.psum(res.count, (row, col))
-        ovf = _psum_bool(ovf_r | ovf_t | ovf_s1 | ovf_s2 | res.overflowed,
-                         (row, col))
-        return count, ovf
+        return res.count, res.overflowed, ovf_r | ovf_t | ovf_s1 | ovf_s2
 
+    return local
+
+
+_CORES = {"linear": _linear_local_core, "cyclic": _cyclic_local_core,
+          "star": _star_local_core}
+
+
+# --------------------------------------------------------------------------
+# one-shot wrappers (legacy API: count + a single overflow flag)
+# --------------------------------------------------------------------------
+
+def _count_sharded(mesh: Mesh, row: str, col: str, local):
     spec = P((row, col))
 
+    def local_fn(rc, rv, scols, sv, tcols, tv):
+        count, loc_ovf, sh_ovf = local(rc, rv, scols, sv, tcols, tv)
+        return (jax.lax.psum(count, (row, col)),
+                _psum_bool(loc_ovf | sh_ovf, (row, col)))
+
     def fn(r: Relation, s: Relation, t: Relation) -> DistJoinResult:
-        sm = compat.shard_map(
-            local, mesh=mesh, in_specs=(spec,) * 6, out_specs=(P(), P()))
+        sm = compat.shard_map(local_fn, mesh=mesh, in_specs=(spec,) * 6,
+                              out_specs=(P(), P()))
         count, ovf = sm(dict(r.columns), r.valid, dict(s.columns), s.valid,
                         dict(t.columns), t.valid)
         return DistJoinResult(count, ovf)
@@ -309,30 +318,246 @@ def star3_count_sharded(mesh: Mesh, row: str, col: str,
     return fn
 
 
+def cyclic3_count_sharded(mesh: Mesh, row: str, col: str, **kw):
+    """Build a jit-able distributed triangle-count:  f(R, S, T) -> result
+    (the paper's grid algorithm, §5.1, on the mesh)."""
+    local = _cyclic_local_core(mesh.shape[row], mesh.shape[col], row, col,
+                               **kw)
+    return _count_sharded(mesh, row, col, local)
+
+
+def linear3_count_sharded(mesh: Mesh, row: str, col: str, **kw):
+    """Distributed Algorithm 1 (§4); the |R||T|/M term of the cost model
+    becomes the T all-gather bytes.  Call once per coarse H(B) partition
+    when R exceeds aggregate device memory."""
+    local = _linear_local_core(mesh.shape[row], mesh.shape[col], row, col,
+                               **kw)
+    return _count_sharded(mesh, row, col, local)
+
+
+def star3_count_sharded(mesh: Mesh, row: str, col: str, **kw):
+    """Distributed star join (§6.5): S crosses the network once, R and T are
+    the only replicated (small) relations."""
+    local = _star_local_core(mesh.shape[row], mesh.shape[col], row, col,
+                             **kw)
+    return _count_sharded(mesh, row, col, local)
+
+
 # --------------------------------------------------------------------------
-# engine entry point: fused local joins on the mesh
+# cross-device skew recovery (engine entry point)
 # --------------------------------------------------------------------------
+
+def _round_sharded(mesh: Mesh, row: str, col: str, local):
+    """One recovery round as ONE shard_map: psum-merged exact partials from
+    overflow-free devices, the per-device overflow bitmap, and the global
+    shuffle-overflow flag.
+
+    The merge is exact past int32: each device's kept partial (which must
+    fit int32 — the same per-partial contract as the fused kernels' cells)
+    is split into two 16-bit limbs that are psum'd separately and
+    recombined host-side in int64, so the GLOBAL round total may exceed
+    2^31 without wrapping.
+    """
+    spec = P((row, col))
+
+    def local_fn(rc, rv, scols, sv, tcols, tv):
+        count, loc_ovf, sh_ovf = local(rc, rv, scols, sv, tcols, tv)
+        kept = jnp.where(loc_ovf, 0, count)                # int32 per device
+        lo = jax.lax.psum(kept & 0xFFFF, (row, col))
+        hi = jax.lax.psum(kept >> 16, (row, col))
+        return (lo, hi, loc_ovf.reshape(1, 1),
+                _psum_bool(sh_ovf, (row, col)))
+
+    sm = jax.jit(compat.shard_map(local_fn, mesh=mesh, in_specs=(spec,) * 6,
+                                  out_specs=(P(), P(), P(row, col), P())))
+
+    def fn(r: Relation, s: Relation, t: Relation):
+        lo, hi, bad, sh = sm(dict(r.columns), r.valid, dict(s.columns),
+                             s.valid, dict(t.columns), t.valid)
+        kept64 = (np.int64(int(hi)) << 16) + np.int64(int(lo))
+        return kept64, bad, sh
+
+    return fn
+
+
+def _np_bucket(col, nb: int, fn: str, salt: int = 0) -> np.ndarray:
+    return np.asarray(hashing.hash_bucket(jnp.asarray(col), nb, fn, salt))
+
+
+def _device_of(kind: str, rel_key: str, rel: Relation, nrow: int,
+               ncol: int) -> tuple[np.ndarray, np.ndarray]:
+    """Mesh position (i, j) per row — the pure-function image of the
+    (unsalted) shuffle destinations.  Used for residual masks and exact
+    final-round capacity histograms; never moves data."""
+    if kind == "linear":                      # r/s by H,G of b; t replicated
+        b = rel.col("b")
+        return _np_bucket(b, nrow, "H"), _np_bucket(b, ncol, "G")
+    if kind == "cyclic":
+        if rel_key == "r":
+            return (_np_bucket(rel.col("a"), nrow, "H"),
+                    _np_bucket(rel.col("b"), ncol, "G"))
+        if rel_key == "s":                    # column-replicated
+            return None, _np_bucket(rel.col("b"), ncol, "G")
+        return _np_bucket(rel.col("a"), nrow, "H"), None
+    # star
+    if rel_key == "r":                        # row-pinned, col-replicated
+        return _np_bucket(rel.col("b"), nrow, "H"), None
+    if rel_key == "t":
+        return None, _np_bucket(rel.col("c"), ncol, "G")
+    return (_np_bucket(rel.col("b"), nrow, "H"),
+            _np_bucket(rel.col("c"), ncol, "G"))
+
+
+_DRIVING = {"linear": ("r", "s"), "cyclic": ("r",), "star": ("s",)}
+
+
+def _mask_residual(kind: str, rels: dict, bad: np.ndarray, nrow: int,
+                   ncol: int) -> dict:
+    """Keep only the driving relation's rows that live on overflowed
+    devices; their device is a hash of their keys, so no shuffle needed."""
+    out = dict(rels)
+    for key in _DRIVING[kind]:
+        i, j = _device_of(kind, key, rels[key], nrow, ncol)
+        keep = bad[i if i is not None else 0, j if j is not None else 0]
+        out[key] = rels[key].mask_where(jnp.asarray(keep))
+    return out
+
+
+def _acceptall_shuffle_caps(kind: str, rels: dict, nrow: int,
+                            ncol: int) -> dict:
+    """Send-buffer capacities that can absorb ANY routing (every destination
+    bucket can hold the whole local shard) — shuffle overflow impossible."""
+    ndev = nrow * ncol
+    lr = rels["r"].capacity // ndev
+    ls = rels["s"].capacity // ndev
+    lt = rels["t"].capacity // ndev
+    if kind == "linear":
+        return {"r1": lr, "r2": nrow * lr, "s1": ls, "s2": nrow * ls}
+    if kind == "cyclic":
+        return {"r1": lr, "r2": nrow * lr, "s1": ls, "t1": lt}
+    return {"r1": lr, "t1": lt, "s1": ls, "s2": nrow * ls}
+
+
+def _exact_local_caps(kind: str, rels: dict, salt: int, nrow: int, ncol: int,
+                      dims: dict) -> tuple[int, int, int]:
+    """Exact per-bucket capacities for the final round: the (device, local
+    bucket) of a row is a pure function of its keys, so the true maximum
+    bucket load is one host-side histogram per relation."""
+    def hist_max(rel, flat, n):
+        v = np.asarray(rel.valid)
+        h = np.bincount(flat[v], minlength=n) if v.any() else np.zeros(1, int)
+        return exact_cap(h)
+
+    r, s, t = rels["r"], rels["s"], rels["t"]
+    if kind == "linear":
+        u, g = dims["local_u"], dims["local_g"]
+        ri, rj = _device_of(kind, "r", r, nrow, ncol)
+        r_flat = (ri * ncol + rj) * u + _np_bucket(r.col("b"), u, "h", salt)
+        si, sj = _device_of(kind, "s", s, nrow, ncol)
+        s_flat = ((si * ncol + sj) * g
+                  + _np_bucket(s.col("c"), g, "g", salt)) * u \
+            + _np_bucket(s.col("b"), u, "h", salt)
+        t_flat = _np_bucket(t.col("c"), g, "g", salt)      # replicated
+        return (hist_max(r, r_flat, nrow * ncol * u),
+                hist_max(s, s_flat, nrow * ncol * g * u),
+                hist_max(t, t_flat, g))
+    if kind == "cyclic":
+        uh, ug, fp = dims["local_uh"], dims["local_ug"], dims["local_f"]
+        ri, rj = _device_of(kind, "r", r, nrow, ncol)
+        r_flat = ((ri * ncol + rj) * uh
+                  + _np_bucket(r.col("a"), uh, "h", salt)) * ug \
+            + _np_bucket(r.col("b"), ug, "g", salt)
+        _, sj = _device_of(kind, "s", s, nrow, ncol)
+        s_flat = (sj * fp + _np_bucket(s.col("c"), fp, "f", salt)) * ug \
+            + _np_bucket(s.col("b"), ug, "g", salt)
+        ti, _ = _device_of(kind, "t", t, nrow, ncol)
+        t_flat = (ti * fp + _np_bucket(t.col("c"), fp, "f", salt)) * uh \
+            + _np_bucket(t.col("a"), uh, "h", salt)
+        return (hist_max(r, r_flat, nrow * ncol * uh * ug),
+                hist_max(s, s_flat, ncol * fp * ug),
+                hist_max(t, t_flat, nrow * fp * uh))
+    # star (chunks forced to 1 in the final round: arrival-order chunk ids
+    # are layout-dependent, the hashed (h, g) cell is not)
+    uh, ug = dims["local_uh"], dims["local_ug"]
+    ri, _ = _device_of(kind, "r", r, nrow, ncol)
+    r_flat = ri * uh + _np_bucket(r.col("b"), uh, "h", salt)
+    _, tj = _device_of(kind, "t", t, nrow, ncol)
+    t_flat = tj * ug + _np_bucket(t.col("c"), ug, "g", salt)
+    si, sj = _device_of(kind, "s", s, nrow, ncol)
+    s_flat = ((si * ncol + sj) * uh
+              + _np_bucket(s.col("b"), uh, "h", salt)) * ug \
+        + _np_bucket(s.col("c"), ug, "g", salt)
+    return (hist_max(r, r_flat, nrow * uh),
+            hist_max(s, s_flat, nrow * ncol * uh * ug),
+            hist_max(t, t_flat, ncol * ug))
+
 
 def engine_count_sharded(mesh: Mesh, row: str, col: str,
-                         kind: str = "linear", **kw):
-    """Distributed fused-engine join: the coarse H(B) (resp. H(A)×G(B),
-    h(B)×g(C)) partitions shard across devices exactly as in the scan-based
-    builders, but each device's local sweep is ONE fused kernel launch
-    (``engine.*_count_fused``) instead of a nested lax.scan — the mesh is
-    the coarse grid, the fused Pallas grid is the fine one.
+                         kind: str = "linear", *, max_rounds: int = 2,
+                         growth: float = 2.0, use_kernel: bool = False,
+                         shuffle_slack: float = 3.0, **kw):
+    """Distributed fused-engine join WITH cross-device skew recovery.
 
-    Overflow anywhere is psum-reduced and reported; the host-side engine
-    (``MultiwayJoinEngine``) is the recovery layer — re-invoke on the
-    flagged shards with a salted plan, as ``core.driver.engine_count`` does
-    on a single host.
+    Returns a host-driven callable ``fn(r, s, t) -> DistEngineResult`` (each
+    round re-traces a shard_map with new static capacities, so the whole
+    thing is not itself jit-able).  Per round: one shard_map launch joins
+    every shard with a salted local plan, psum-merges the exact partials of
+    overflow-free devices, and reports the per-device overflow bitmap; the
+    host re-runs only the rows owned by overflowed devices.  The final round
+    is exact-sized (accept-all shuffles + histogram-true bucket capacities),
+    so ``overflowed`` is always False and the count is exact under ANY skew.
     """
-    builders = {"linear": linear3_count_sharded,
-                "cyclic": cyclic3_count_sharded,
-                "star": star3_count_sharded}
-    if kind not in builders:
+    if kind not in _CORES:
         raise ValueError(f"unknown kind {kind!r}; choose from "
-                         f"{sorted(builders)}")
-    return builders[kind](mesh, row, col, fused=True, **kw)
+                         f"{sorted(_CORES)}")
+    nrow, ncol = mesh.shape[row], mesh.shape[col]
+    core = _CORES[kind]
+    dims = {"linear": {"local_u": 8, "local_g": 4},
+            "cyclic": {"local_uh": 4, "local_ug": 4, "local_f": 2},
+            "star": {"local_uh": 4, "local_ug": 4}}[kind]
+    dims.update({k: v for k, v in kw.items() if k in dims})
+
+    def fn(r: Relation, s: Relation, t: Relation) -> DistEngineResult:
+        rels = {"r": r, "s": s, "t": t}
+        total, rounds = 0, 0
+        sh_scale, cap_scale = 1.0, 1.0
+        for rnd in range(max_rounds + 1):
+            final = rnd == max_rounds
+            opts = dict(kw)
+            if final:
+                opts["shuffle_caps"] = _acceptall_shuffle_caps(
+                    kind, rels, nrow, ncol)
+                opts["local_caps"] = _exact_local_caps(
+                    kind, rels, rnd, nrow, ncol, dims)
+                if kind == "star":
+                    opts["local_chunks"] = 1
+            local = core(nrow, ncol, row, col, fused=True,
+                         use_kernel=use_kernel, salt=rnd,
+                         cap_scale=cap_scale,
+                         shuffle_slack=shuffle_slack * sh_scale, **opts)
+            kept, bad, sh_any = _round_sharded(mesh, row, col, local)(
+                rels["r"], rels["s"], rels["t"])
+            rounds += 1
+            if bool(sh_any):
+                # send buffers dropped rows: the round's partials are not
+                # trustworthy anywhere — discard and retry with roomier
+                # shuffles (the final round's accept-all caps cannot hit
+                # this branch)
+                assert not final, "accept-all shuffle caps overflowed"
+                sh_scale *= growth
+                cap_scale *= growth
+                continue
+            total += int(kept)
+            bad_np = np.asarray(bad)
+            if not bad_np.any():
+                return DistEngineResult(np.int64(total), jnp.asarray(False),
+                                        rounds)
+            assert not final, "exact-sized final round overflowed"
+            rels = _mask_residual(kind, rels, bad_np, nrow, ncol)
+            cap_scale *= growth
+        raise AssertionError("unreachable: final round is exact-sized")
+
+    return fn
 
 
 # --------------------------------------------------------------------------

@@ -20,10 +20,9 @@ retry drivers remain as the scan-based baseline.
 
 from __future__ import annotations
 
-import math
 from typing import Any
 
-from repro.core import cyclic3, engine, linear3, star3
+from repro.core import cyclic3, engine, linear3, recovery, star3
 
 
 class OverflowError_(RuntimeError):
@@ -32,28 +31,28 @@ class OverflowError_(RuntimeError):
 
 def engine_count(kind: str, r, s, t, plan=None, *, m_budget: int | None = None,
                  use_kernel: bool = False, max_rounds: int = 3,
-                 growth: float = 2.0, **cols) -> engine.EngineResult:
+                 growth: float = 2.0, base_salt: int = 0,
+                 **cols) -> engine.EngineResult:
     """Fused-engine count with surgical skew recovery (exact by
     construction; ``overflowed`` is always False on return)."""
     eng = engine.MultiwayJoinEngine(kind, use_kernel=use_kernel,
-                                    max_rounds=max_rounds, growth=growth)
+                                    max_rounds=max_rounds, growth=growth,
+                                    base_salt=base_salt)
     return eng.count(r, s, t, plan, m_budget=m_budget, **cols)
 
 
 def engine_per_r_counts(r, s, t, plan, *, use_kernel: bool = False,
                         max_rounds: int = 3, growth: float = 2.0,
-                        **cols) -> engine.PerRResult:
+                        base_salt: int = 0, **cols) -> engine.PerRResult:
     """Fused-engine per-R-tuple counts (Example 1) with skew recovery."""
     eng = engine.MultiwayJoinEngine("linear", use_kernel=use_kernel,
-                                    max_rounds=max_rounds, growth=growth)
+                                    max_rounds=max_rounds, growth=growth,
+                                    base_salt=base_salt)
     return eng.per_r_counts(r, s, t, plan, **cols)
 
 
 def _grown(plan: Any, growth: float, align: int = 8) -> Any:
-    caps = {f: getattr(plan, f) for f in ("r_cap", "s_cap", "t_cap")}
-    caps = {f: int(math.ceil(c * growth / align) * align)
-            for f, c in caps.items()}
-    return plan._replace(**caps)
+    return recovery.grown(plan, growth, align)
 
 
 def linear3_count_auto(r, s, t, plan: linear3.Linear3Plan, *,

@@ -15,25 +15,14 @@ Skew recovery (paper §5's skew discussion, made correct-by-construction)
 -----------------------------------------------------------------------
 Fixed-capacity buckets overflow under key skew.  The scan drivers only
 *flag* this; ``core.driver`` then re-runs the whole query with grown
-capacities.  The engine recovers surgically instead, exploiting that the
-fused kernels return **per-partition** partial counts:
-
-1. Bucketize and read the true per-bucket histograms (``Buckets.counts``).
-2. Coarse partitions whose buckets fit are *exact*: their partial counts are
-   kept directly — no re-run, no wasted work.
-3. Overflowed coarse partitions are split off: the rows they own are
-   re-partitioned with a salted second-level hash (plus geometric capacity
-   growth) and re-joined in the next round — only those shards re-run.
-4. The final round sizes capacities from the exact residual histograms, so
-   it cannot overflow and the loop terminates with ``overflowed == False``.
-
-Exactness argument: every output triple contains exactly one R row (linear /
-cyclic) or one S row (star), and that row lives in exactly one coarse
-partition per round; partitions are disjointly split into "kept" and
-"re-run", so each triple is counted exactly once across rounds.  A kept
-partition only reads buckets that fit (for linear, T is pre-sized from its
-exact histogram since it is shared by every H(B) partition), so kept partial
-counts are exact.
+capacities.  The engine recovers surgically instead via the shared round
+engine in ``core.recovery``: exact coarse partitions keep their fused
+partial counts, overflowed ones re-run with a salted hash and grown
+capacities, and the final round is exact-histogram-sized so it cannot
+overflow — ``overflowed == False`` is a postcondition.  Each round performs
+exactly ONE hashing pass per relation (histograms, layouts and residual
+masks all derive from one ``composite_ids`` call); see ``recovery``'s
+docstring for the full contract and exactness argument.
 
 The ``*_count_fused`` functions are single-pass and fully traceable (jit /
 shard_map safe); ``MultiwayJoinEngine`` adds the host-side recovery loop.
@@ -41,34 +30,12 @@ shard_map safe); ``MultiwayJoinEngine`` adds the host-side recovery loop.
 
 from __future__ import annotations
 
-import math
-from typing import NamedTuple
-
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import cyclic3, linear3, partition, star3
+from repro.core import cyclic3, linear3, partition, recovery, star3
+from repro.core.recovery import EngineResult, PerRResult  # noqa: F401  (re-export)
 from repro.core.relation import Relation
 from repro.kernels import ops as kops
 
-
-class EngineResult(NamedTuple):
-    count: jnp.ndarray           # () int32 exact join cardinality
-    overflowed: jnp.ndarray      # () bool — False after successful recovery
-    tuples_read: jnp.ndarray     # () int32 tuples streamed, summed over rounds
-    rounds: int                  # recovery rounds executed (1 = no skew)
-
-
-class PerRResult(NamedTuple):
-    keys: jnp.ndarray            # [N] int32 carried key column (flattened)
-    counts: jnp.ndarray          # [N] int32 per-R-tuple counts
-    valid: jnp.ndarray           # [N] bool
-    overflowed: jnp.ndarray      # () bool
-    rounds: int
-
-
-def _align(n: int, align: int = 8) -> int:
-    return max(align, int(math.ceil(n / align)) * align)
+import jax.numpy as jnp
 
 
 # ==========================================================================
@@ -154,16 +121,19 @@ def linear3_count_fused(r: Relation, s: Relation, t: Relation,
 def cyclic3_count_fused(r: Relation, s: Relation, t: Relation,
                         plan: cyclic3.Cyclic3Plan, *,
                         use_kernel: bool = False, salt: int = 0,
+                        pair_index: bool = True,
                         ra: str = "a", rb: str = "b", sb: str = "b",
                         sc: str = "c", tc: str = "c",
                         ta: str = "a") -> cyclic3.Cyclic3Result:
-    """The §5 grid algorithm as ONE fused launch."""
+    """The §5 grid algorithm as ONE fused launch (sorted (c, a)-pair-index
+    probes by default; ``pair_index=False`` for the all-pairs contraction)."""
     rg, sg, tg = cyclic3_layouts(r, s, t, plan, salt=salt, ra=ra, rb=rb,
                                  sb=sb, sc=sc, tc=tc, ta=ta)
     c = kops.fused_count3_cyclic(rg.columns[ra], rg.columns[rb], rg.valid,
                                  sg.columns[sb], sg.columns[sc], sg.valid,
                                  tg.columns[tc], tg.columns[ta], tg.valid,
-                                 use_kernel=use_kernel)
+                                 use_kernel=use_kernel,
+                                 pair_index=pair_index)
     overflow = rg.overflowed | sg.overflowed | tg.overflowed
     tuples = r.n + plan.h_parts * s.n + plan.g_parts * t.n
     return cyclic3.Cyclic3Result(jnp.sum(c), overflow,
@@ -208,13 +178,15 @@ class MultiwayJoinEngine:
     KINDS = ("linear", "cyclic", "star")
 
     def __init__(self, kind: str = "linear", *, use_kernel: bool = False,
-                 max_rounds: int = 3, growth: float = 2.0):
+                 max_rounds: int = 3, growth: float = 2.0,
+                 base_salt: int = 0):
         if kind not in self.KINDS:
             raise ValueError(f"unknown kind {kind!r}; choose from {self.KINDS}")
         self.kind = kind
         self.use_kernel = use_kernel
         self.max_rounds = max_rounds
         self.growth = growth
+        self.base_salt = base_salt
 
     # -- planning ----------------------------------------------------------
 
@@ -237,178 +209,11 @@ class MultiwayJoinEngine:
                 raise ValueError("pass a plan or m_budget")
             plan = self.default_plan(int(r.n), int(s.n), int(t.n),
                                      m_budget=m_budget)
-        if self.kind == "linear":
-            return self._linear_count(r, s, t, plan, **cols)
-        if self.kind == "cyclic":
-            return self._cyclic_count(r, s, t, plan, **cols)
-        return self._star_count(r, s, t, plan, **cols)
-
-    def _grown(self, plan):
-        # lazy import: driver imports engine at module load
-        from repro.core import driver
-        return driver._grown(plan, self.growth)
-
-    # -- linear ------------------------------------------------------------
-
-    def _linear_count(self, r, s, t, plan, *, rb="b", sb="b", sc="c",
-                      tc="c") -> EngineResult:
-        total, tuples = 0, 0
-        for rnd in range(self.max_rounds + 1):
-            final = rnd == self.max_rounds
-            hp, u, gp = plan.h_parts, plan.u, plan.g_parts
-            # T is shared by every H(B) partition: size it from its exact
-            # g(C) histogram so T overflow (unrecoverable by H-splitting)
-            # cannot occur.
-            t_ids = partition.bucket_ids_for(t, tc, gp, "g", rnd)
-            t_hist = np.bincount(np.asarray(t_ids), minlength=gp + 1)[:gp]
-            t_cap = _align(max(int(t_hist.max(initial=0)), 1))
-            plan = plan._replace(t_cap=max(plan.t_cap, t_cap))
-            if final:
-                # exact-histogram sizing: this round cannot overflow
-                r_ids, r_nb = partition.composite_ids(
-                    r, [(rb, hp, "H"), (rb, u, "h")], rnd)
-                s_ids, s_nb = partition.composite_ids(
-                    s, [(sb, hp, "H"), (sc, gp, "g"), (sb, u, "h")], rnd)
-                r_hist = np.bincount(np.asarray(r_ids),
-                                     minlength=r_nb + 1)[:r_nb]
-                s_hist = np.bincount(np.asarray(s_ids),
-                                     minlength=s_nb + 1)[:s_nb]
-                plan = plan._replace(
-                    r_cap=_align(max(int(r_hist.max(initial=0)), 1)),
-                    s_cap=_align(max(int(s_hist.max(initial=0)), 1)))
-            rg, sg, tg = linear3_layouts(r, s, t, plan, salt=rnd, rb=rb,
-                                         sb=sb, sc=sc, tc=tc)
-            counts = kops.fused_count3_linear(
-                rg.columns[rb], rg.valid, sg.columns[sb], sg.columns[sc],
-                sg.valid, tg.columns[tc], tg.valid,
-                use_kernel=self.use_kernel)                       # [hp, u]
-            bad = (np.asarray(rg.counts > plan.r_cap).any(axis=1)
-                   | np.asarray(sg.counts > plan.s_cap).any(axis=(1, 2)))
-            tuples += int(r.n) + int(s.n) + hp * int(t.n)
-            if final or not bad.any():
-                total += int(jnp.sum(counts))
-                return EngineResult(jnp.int32(total), jnp.asarray(False),
-                                    jnp.int32(tuples), rnd + 1)
-            # keep exact partitions, split off the skewed ones
-            good = jnp.asarray(~bad)
-            total += int(jnp.sum(jnp.where(good[:, None], counts, 0)))
-            bad_j = jnp.asarray(bad)
-            r_h = partition.bucket_ids_for(r, rb, hp, "H", rnd)
-            s_h = partition.bucket_ids_for(s, sb, hp, "H", rnd)
-            r = r.mask_where(bad_j[jnp.clip(r_h, 0, hp - 1)])
-            s = s.mask_where(bad_j[jnp.clip(s_h, 0, hp - 1)])
-            plan = self._grown(plan)
-        raise AssertionError("unreachable: final round is exact-sized")
-
-    # -- cyclic ------------------------------------------------------------
-
-    def _cyclic_count(self, r, s, t, plan, *, ra="a", rb="b", sb="b",
-                      sc="c", tc="c", ta="a") -> EngineResult:
-        total, tuples = 0, 0
-        for rnd in range(self.max_rounds + 1):
-            final = rnd == self.max_rounds
-            hp, gp = plan.h_parts, plan.g_parts
-            if final:
-                r_ids, r_nb = partition.composite_ids(
-                    r, [(ra, hp, "H"), (rb, gp, "G"), (ra, plan.uh, "h"),
-                        (rb, plan.ug, "g")], rnd)
-                s_ids, s_nb = partition.composite_ids(
-                    s, [(sb, gp, "G"), (sc, plan.f_parts, "f"),
-                        (sb, plan.ug, "g")], rnd)
-                t_ids, t_nb = partition.composite_ids(
-                    t, [(ta, hp, "H"), (tc, plan.f_parts, "f"),
-                        (ta, plan.uh, "h")], rnd)
-                caps = []
-                for ids, nb in ((r_ids, r_nb), (s_ids, s_nb), (t_ids, t_nb)):
-                    hist = np.bincount(np.asarray(ids), minlength=nb + 1)[:nb]
-                    caps.append(_align(max(int(hist.max(initial=0)), 1)))
-                plan = plan._replace(r_cap=caps[0], s_cap=caps[1],
-                                     t_cap=caps[2])
-            rg, sg, tg = cyclic3_layouts(r, s, t, plan, salt=rnd, ra=ra,
-                                         rb=rb, sb=sb, sc=sc, tc=tc, ta=ta)
-            counts = kops.fused_count3_cyclic(
-                rg.columns[ra], rg.columns[rb], rg.valid, sg.columns[sb],
-                sg.columns[sc], sg.valid, tg.columns[tc], tg.columns[ta],
-                tg.valid, use_kernel=self.use_kernel)    # [hp, gp, uh, ug]
-            r_bad = np.asarray(rg.counts > plan.r_cap).any(axis=(2, 3))
-            s_bad = np.asarray(sg.counts > plan.s_cap).any(axis=(1, 2))
-            t_bad = np.asarray(tg.counts > plan.t_cap).any(axis=(1, 2))
-            # a cell is tainted if its R buckets, its S column partition, or
-            # its T row partition overflowed anywhere
-            bad = r_bad | s_bad[None, :] | t_bad[:, None]      # [hp, gp]
-            tuples += int(r.n) + hp * int(s.n) + gp * int(t.n)
-            if final or not bad.any():
-                total += int(jnp.sum(counts))
-                return EngineResult(jnp.int32(total), jnp.asarray(False),
-                                    jnp.int32(tuples), rnd + 1)
-            good = jnp.asarray(~bad)
-            total += int(jnp.sum(
-                jnp.where(good[:, :, None, None], counts, 0)))
-            # the residual is defined by R rows (each triple has exactly one)
-            bad_j = jnp.asarray(bad)
-            r_hid = partition.bucket_ids_for(r, ra, hp, "H", rnd)
-            r_gid = partition.bucket_ids_for(r, rb, gp, "G", rnd)
-            cell_bad = bad_j[jnp.clip(r_hid, 0, hp - 1),
-                             jnp.clip(r_gid, 0, gp - 1)]
-            r = r.mask_where(cell_bad)
-            plan = self._grown(plan)
-        raise AssertionError("unreachable: final round is exact-sized")
-
-    # -- star --------------------------------------------------------------
-
-    def _star_count(self, r, s, t, plan, *, rb="b", sb="b", sc="c",
-                    tc="c") -> EngineResult:
-        total, tuples = 0, 0
-        for rnd in range(self.max_rounds + 1):
-            final = rnd == self.max_rounds
-            uh, ug, ch = plan.uh, plan.ug, plan.chunks
-            if final:
-                r_ids = partition.bucket_ids_for(r, rb, uh, "h", rnd)
-                t_ids = partition.bucket_ids_for(t, tc, ug, "g", rnd)
-                r_hist = np.bincount(np.asarray(r_ids), minlength=uh + 1)[:uh]
-                t_hist = np.bincount(np.asarray(t_ids), minlength=ug + 1)[:ug]
-                chunk_ids = jnp.where(
-                    s.valid,
-                    (jnp.arange(s.capacity, dtype=jnp.int32) * ch)
-                    // s.capacity, 0)
-                s_hb = partition.bucket_ids_for(s, sb, uh, "h", rnd)
-                s_gc = partition.bucket_ids_for(s, sc, ug, "g", rnd)
-                s_nb = ch * uh * ug
-                s_flat = jnp.where(s.valid,
-                                   (chunk_ids * uh + s_hb) * ug + s_gc,
-                                   jnp.int32(s_nb))
-                s_hist = np.bincount(np.asarray(s_flat),
-                                     minlength=s_nb + 1)[:s_nb]
-                plan = plan._replace(
-                    r_cap=_align(max(int(r_hist.max(initial=0)), 1)),
-                    t_cap=_align(max(int(t_hist.max(initial=0)), 1)),
-                    s_cap=_align(max(int(s_hist.max(initial=0)), 1)))
-            rg, sg, tg = star3_layouts(r, s, t, plan, salt=rnd, rb=rb,
-                                       sb=sb, sc=sc, tc=tc)
-            counts = kops.fused_count3_star(
-                rg.columns[rb], rg.valid, sg.columns[sb], sg.columns[sc],
-                sg.valid, tg.columns[tc], tg.valid,
-                use_kernel=self.use_kernel)                      # [uh, ug]
-            r_bad = np.asarray(rg.counts > plan.r_cap)           # [uh]
-            t_bad = np.asarray(tg.counts > plan.t_cap)           # [ug]
-            s_bad = np.asarray(sg.counts > plan.s_cap).any(axis=0)  # [uh,ug]
-            bad = r_bad[:, None] | t_bad[None, :] | s_bad
-            tuples += int(r.n) + int(s.n) + int(t.n)
-            if final or not bad.any():
-                total += int(jnp.sum(counts))
-                return EngineResult(jnp.int32(total), jnp.asarray(False),
-                                    jnp.int32(tuples), rnd + 1)
-            good = jnp.asarray(~bad)
-            total += int(jnp.sum(jnp.where(good, counts, 0)))
-            # the residual is defined by S rows (each triple has exactly one)
-            bad_j = jnp.asarray(bad)
-            s_hid = partition.bucket_ids_for(s, sb, uh, "h", rnd)
-            s_gid = partition.bucket_ids_for(s, sc, ug, "g", rnd)
-            cell_bad = bad_j[jnp.clip(s_hid, 0, uh - 1),
-                             jnp.clip(s_gid, 0, ug - 1)]
-            s = s.mask_where(cell_bad)
-            plan = self._grown(plan)
-        raise AssertionError("unreachable: final round is exact-sized")
+        ops = recovery.OPS[self.kind](**cols)
+        return recovery.run_count_rounds(
+            ops, r, s, t, plan, max_rounds=self.max_rounds,
+            growth=self.growth, use_kernel=self.use_kernel,
+            base_salt=self.base_salt)
 
     # -- per-R aggregates (linear only) ------------------------------------
 
@@ -419,53 +224,8 @@ class MultiwayJoinEngine:
         flattened (keys, counts, valid) concatenated across rounds."""
         if self.kind != "linear":
             raise ValueError("per_r_counts is a linear-join aggregate")
-        keys_out, counts_out, valid_out = [], [], []
-        rounds = 0
-        for rnd in range(self.max_rounds + 1):
-            final = rnd == self.max_rounds
-            hp, u, gp = plan.h_parts, plan.u, plan.g_parts
-            t_ids = partition.bucket_ids_for(t, tc, gp, "g", rnd)
-            t_hist = np.bincount(np.asarray(t_ids), minlength=gp + 1)[:gp]
-            plan = plan._replace(t_cap=max(
-                plan.t_cap, _align(max(int(t_hist.max(initial=0)), 1))))
-            if final:
-                r_ids, r_nb = partition.composite_ids(
-                    r, [(rb, hp, "H"), (rb, u, "h")], rnd)
-                s_ids, s_nb = partition.composite_ids(
-                    s, [(sb, hp, "H"), (sc, gp, "g"), (sb, u, "h")], rnd)
-                r_hist = np.bincount(np.asarray(r_ids),
-                                     minlength=r_nb + 1)[:r_nb]
-                s_hist = np.bincount(np.asarray(s_ids),
-                                     minlength=s_nb + 1)[:s_nb]
-                plan = plan._replace(
-                    r_cap=_align(max(int(r_hist.max(initial=0)), 1)),
-                    s_cap=_align(max(int(s_hist.max(initial=0)), 1)))
-            rg, sg, tg = linear3_layouts(r, s, t, plan, salt=rnd, rb=rb,
-                                         sb=sb, sc=sc, tc=tc)
-            counts = kops.fused_per_r_counts(
-                rg.columns[rb], rg.valid, sg.columns[sb], sg.columns[sc],
-                sg.valid, tg.columns[tc], tg.valid,
-                use_kernel=self.use_kernel)                   # [hp, u, Cr]
-            bad = (np.asarray(rg.counts > plan.r_cap).any(axis=1)
-                   | np.asarray(sg.counts > plan.s_cap).any(axis=(1, 2)))
-            key = key_col if key_col in rg.columns else rb
-            keep = jnp.asarray(~bad) if bad.any() else None
-            valid = rg.valid
-            if keep is not None and not final:
-                valid = valid & keep[:, None, None]
-            keys_out.append(rg.columns[key].reshape(-1))
-            counts_out.append(counts.reshape(-1))
-            valid_out.append(valid.reshape(-1))
-            rounds = rnd + 1
-            if final or not bad.any():
-                break
-            bad_j = jnp.asarray(bad)
-            r_h = partition.bucket_ids_for(r, rb, hp, "H", rnd)
-            s_h = partition.bucket_ids_for(s, sb, hp, "H", rnd)
-            r = r.mask_where(bad_j[jnp.clip(r_h, 0, hp - 1)])
-            s = s.mask_where(bad_j[jnp.clip(s_h, 0, hp - 1)])
-            plan = self._grown(plan)
-        return PerRResult(jnp.concatenate(keys_out),
-                          jnp.concatenate(counts_out),
-                          jnp.concatenate(valid_out),
-                          jnp.asarray(False), rounds)
+        ops = recovery.LinearOps(rb=rb, sb=sb, sc=sc, tc=tc)
+        return recovery.run_per_r_rounds(
+            ops, r, s, t, plan, max_rounds=self.max_rounds,
+            growth=self.growth, use_kernel=self.use_kernel,
+            base_salt=self.base_salt, key_col=key_col)

@@ -18,11 +18,21 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import hashing
-from repro.core.relation import Relation, sentinel_fill
+from repro.core.relation import SENTINEL, Relation, sentinel_fill
+
+_INT32_MAX = 2**31 - 1
+
+
+def _check_flat_range(n_slots: int, what: str) -> None:
+    """Flat bucket/slot ids are int32 throughout; a silent wrap would scatter
+    rows into the wrong buckets.  Fail loudly instead."""
+    if n_slots > _INT32_MAX:
+        raise ValueError(
+            f"{what} = {n_slots} exceeds the int32 id range ({_INT32_MAX}); "
+            "use fewer/coarser bucket levels or smaller capacities")
 
 
 class SortedPartition(NamedTuple):
@@ -77,7 +87,7 @@ def partition_sorted2(rel: Relation, outer_col: str, inner_col: str,
 
 def bucketize(rel: Relation, key_col: str, n_buckets: int, capacity: int,
               fn: str = "h", salt: int = 0,
-              sentinel: int = -0x7FFFFFFF) -> Buckets:
+              sentinel: int = SENTINEL) -> Buckets:
     """Scatter rows into a fixed [n_buckets, capacity] grid.
 
     Rows beyond a bucket's capacity are dropped and flagged via
@@ -85,6 +95,7 @@ def bucketize(rel: Relation, key_col: str, n_buckets: int, capacity: int,
     salt).  Implementation: rank-within-bucket via a stable sort, then a
     single scatter; O(n log n), no dynamic shapes.
     """
+    _check_flat_range(n_buckets * capacity + 1, "n_buckets * capacity")
     ids = bucket_ids_for(rel, key_col, n_buckets, fn, salt)
     order = jnp.argsort(ids, stable=True)
     sorted_ids = ids[order]
@@ -111,10 +122,11 @@ def bucketize(rel: Relation, key_col: str, n_buckets: int, capacity: int,
 
 def bucketize_by_ids(rel: Relation, flat_ids: jnp.ndarray, n_buckets: int,
                      capacity: int, out_shape: tuple,
-                     sentinel: int = -0x7FFFFFF0) -> Buckets:
+                     sentinel: int = SENTINEL) -> Buckets:
     """Scatter rows into `[*out_shape, capacity]` by precomputed flat bucket
     ids (invalid rows must carry id == n_buckets).  Generic engine behind the
     composite two/three-level layouts of Fig 2/3."""
+    _check_flat_range(n_buckets * capacity + 1, "n_buckets * capacity")
     order = jnp.argsort(flat_ids, stable=True)
     sorted_ids = flat_ids[order]
     starts = jnp.searchsorted(sorted_ids, jnp.arange(n_buckets + 1), side="left")
@@ -141,13 +153,21 @@ def composite_ids(rel: Relation, specs: list[tuple[str, int, str]],
                   salt: int = 0) -> tuple[jnp.ndarray, int]:
     """Flat composite bucket id from [(column, n_buckets, hash_fn), ...],
     most-significant first.  Invalid rows get id == prod(n_buckets).
-    ``salt`` re-randomizes every level (skew-recovery re-partitioning)."""
-    flat = jnp.zeros((rel.capacity,), jnp.int32)
+    ``salt`` re-randomizes every level (skew-recovery re-partitioning).
+
+    Raises ``ValueError`` when ``prod(n_buckets)`` exceeds the int32 id
+    range: ``flat`` accumulates in int32, so a deeper/wider spec (e.g. the
+    cyclic four-level layout on a huge plan) would otherwise wrap silently
+    and scatter rows into wrong buckets.
+    """
     total = 1
+    for _col, nb, _fn in specs:
+        total *= nb
+    _check_flat_range(total, f"prod(n_buckets) for specs {specs!r}")
+    flat = jnp.zeros((rel.capacity,), jnp.int32)
     for col, nb, fn in specs:
         ids = bucket_ids_for(rel, col, nb, fn, salt)
         flat = flat * nb + jnp.clip(ids, 0, nb - 1)
-        total *= nb
     return jnp.where(rel.valid, flat, jnp.int32(total)), total
 
 

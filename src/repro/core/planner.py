@@ -101,8 +101,8 @@ class EnginePlan:
         # same result contract as the 3-way engine path; cascade traffic =
         # both inputs + the intermediate written then re-read + T
         tuples = int(r.n) + int(s.n) + 2 * inter + int(t.n)
-        return engine.EngineResult(res.count, jnp.asarray(False),
-                                   jnp.int32(tuples), 1)
+        return engine.EngineResult(np.int64(int(res.count)),
+                                   jnp.asarray(False), np.int64(tuples), 1)
 
 
 def plan_query(kind: str, n_r: int, n_s: int, n_t: int, d: float, *,

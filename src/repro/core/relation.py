@@ -16,6 +16,15 @@ import jax
 import jax.numpy as jnp
 
 
+# The canonical padding sentinel for invalid relation slots.  Every layer
+# that fills dead slots (``sentinel_fill``, ``partition.bucketize``,
+# ``partition.bucketize_by_ids``) uses THIS constant; the per-side probe
+# sentinels in ``kernels.ops`` are derived from it (SENTINEL + 15 + side)
+# so no sentinel of any kind can ever equal a live key (keys are ≥ -2^30
+# by the data-layer contract) or a sentinel from another side.
+SENTINEL = -0x7FFFFFFF
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class Relation:
@@ -79,7 +88,7 @@ class Relation:
         return Relation(dict(self.columns), self.valid & keep)
 
 
-def sentinel_fill(rel: Relation, sentinel: int = -0x7FFFFFFF) -> Relation:
+def sentinel_fill(rel: Relation, sentinel: int = SENTINEL) -> Relation:
     """Overwrite invalid rows' columns with a sentinel that never equals a
     live key, so masked compare loops need no extra predicate."""
     cols = {

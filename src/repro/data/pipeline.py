@@ -13,7 +13,6 @@ from __future__ import annotations
 import dataclasses
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import binary_join
 from repro.core.relation import Relation

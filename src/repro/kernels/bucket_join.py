@@ -346,6 +346,66 @@ def fused_count3_cyclic(ra, rb, sb, sc, tc, ta, *, interpret: bool = True):
     return out
 
 
+def _fused_cyclic_pairidx_kernel(ra_ref, rb_ref, sb_ref, sc_ref, tcs_ref,
+                                 tas_ref, out_ref):
+    """grid = (hp, gp, uh, ug, fp); T arrives as a lex-sorted (c, a)-pair
+    index and each S slot range-scans it (two searchsorted probes) instead
+    of the all-pairs contraction.  The range sums come from a prefix-sum
+    table over the sorted run — O(Ct·Cr + Cs·Cr) per step instead of
+    O(Cs·Cr·Ct).  Binary-search gathers keep this kernel interpret-mode
+    (CPU/XLA) territory; the all-pairs variant remains the MXU mapping."""
+    @pl.when(pl.program_id(4) == 0)
+    def _():
+        out_ref[0, 0, 0, 0] = 0
+
+    ra = ra_ref[0, 0, 0, 0, :]
+    rb = rb_ref[0, 0, 0, 0, :]
+    sb = sb_ref[0, 0, 0, :]
+    sc = sc_ref[0, 0, 0, :]
+    tcs = tcs_ref[0, 0, 0, :]
+    tas = tas_ref[0, 0, 0, :]
+    lo = jnp.searchsorted(tcs, sc, side="left")                # [Cs]
+    hi = jnp.searchsorted(tcs, sc, side="right")               # [Cs]
+    m3 = (tas[:, None] == ra[None, :]).astype(jnp.int32)       # (Ct, Cr)
+    pre = jnp.pad(jnp.cumsum(m3, axis=0), ((1, 0), (0, 0)))    # (Ct+1, Cr)
+    g = jnp.take(pre, hi, axis=0) - jnp.take(pre, lo, axis=0)  # (Cs, Cr)
+    e = (sb[:, None] == rb[None, :]).astype(jnp.int32)         # (Cs, Cr)
+    out_ref[0, 0, 0, 0] += jnp.sum(e * g)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_count3_cyclic_pairidx(ra, rb, sb, sc, tcs, tas, *,
+                                interpret: bool = True):
+    """Fused cyclic sweep over a sorted (c, a)-pair index of T.
+
+    Same layout contract as ``fused_count3_cyclic`` except tcs/tas must be
+    lex-sorted by (c, a) along the capacity axis (``ops.lex_sort_pairs``).
+    returns per-cell counts [hp, gp, uh, ug] int32.
+    """
+    hp, gp, uh, ug, cr = ra.shape
+    _, fp, _, cs = sb.shape
+    _, _, _, ct = tcs.shape
+    out = pl.pallas_call(
+        _fused_cyclic_pairidx_kernel,
+        grid=(hp, gp, uh, ug, fp),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, 1, cr),
+                         lambda i, j, a, b, f: (i, j, a, b, 0)),
+            pl.BlockSpec((1, 1, 1, 1, cr),
+                         lambda i, j, a, b, f: (i, j, a, b, 0)),
+            pl.BlockSpec((1, 1, 1, cs), lambda i, j, a, b, f: (j, f, b, 0)),
+            pl.BlockSpec((1, 1, 1, cs), lambda i, j, a, b, f: (j, f, b, 0)),
+            pl.BlockSpec((1, 1, 1, ct), lambda i, j, a, b, f: (i, f, a, 0)),
+            pl.BlockSpec((1, 1, 1, ct), lambda i, j, a, b, f: (i, f, a, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, 1),
+                               lambda i, j, a, b, f: (i, j, a, b)),
+        out_shape=jax.ShapeDtypeStruct((hp, gp, uh, ug), jnp.int32),
+        interpret=interpret,
+    )(ra, rb, sb, sc, tcs, tas)
+    return out
+
+
 def _fused_star_kernel(rb_ref, sb_ref, sc_ref, tc_ref, out_ref):
     """grid = (uh, ug, chunks);  the S arrival-order stream innermost."""
     @pl.when(pl.program_id(2) == 0)

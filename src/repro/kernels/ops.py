@@ -19,11 +19,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.relation import SENTINEL
 from repro.kernels import bucket_join, radix_hist, ref
 
-SENT_BASE = -0x7FFFFFF0
+# Per-side probe sentinels, derived from the ONE canonical padding sentinel
+# (``relation.SENTINEL``, also the fill value of every bucketized layout) so
+# the whole constellation lives in [SENTINEL, SENTINEL + 20] — far below the
+# ≥ -2^30 key floor — and no two sides can ever false-match each other or a
+# padded slot.
+SENT_BASE = SENTINEL + 15
 _SENT = {"r": SENT_BASE + 1, "s": SENT_BASE + 2, "t": SENT_BASE + 3,
          "a": SENT_BASE + 4, "b": SENT_BASE + 5}
+assert len(set(_SENT.values()) | {SENTINEL}) == len(_SENT) + 1
 
 
 def _interpret() -> bool:
@@ -176,6 +183,79 @@ def _fused_per_r_ref(rb, sb, sc, tc):
     return acc
 
 
+def lex_sort_pairs(tc, ta):
+    """Sort each bucket row's (c, a) pairs lexicographically by (c, then a).
+
+    tc/ta: [..., Ct] sentinel-masked keys.  Returns (tc_sorted, ta_sorted) —
+    the sorted (c, a)-pair index the cyclic probes range-scan.
+    """
+    order = jnp.lexsort((ta, tc), axis=-1)
+    return (jnp.take_along_axis(tc, order, axis=-1),
+            jnp.take_along_axis(ta, order, axis=-1))
+
+
+def _pairidx_cell_counts(ra, rb, sb, sc, tcs, tas):
+    """Per-bucket triangle counts via the sorted (c, a)-pair index.
+
+    ra/rb: [B, Cr], sb/sc: [B, Cs], tcs/tas: [B, Ct] with (tcs, tas)
+    lex-sorted per bucket (``lex_sort_pairs``).  Returns [B] int32.
+
+    Instead of the all-pairs contraction Σ (M1ᵀM2) ⊙ M3 (O(Cs·Cr·Ct) per
+    bucket), each S slot range-scans the pair index: its T matches are the
+    contiguous run tcs ∈ [lo, hi) found by two ``searchsorted`` probes, and
+    the per-R a-match counts over that run come from a prefix-sum table —
+    O(Ct·Cr + Cs·Cr + Cs·log Ct) per bucket.  Same per-bucket semantics,
+    TrieJax-style indexed second-relation probe.
+    """
+    lo = jax.vmap(lambda t, p: jnp.searchsorted(t, p, side="left"))(tcs, sc)
+    hi = jax.vmap(lambda t, p: jnp.searchsorted(t, p, side="right"))(tcs, sc)
+    # prefix sums over the sorted T run of per-R a-equality
+    m3 = (tas[:, :, None] == ra[:, None, :]).astype(jnp.int32)   # [B, Ct, Cr]
+    pre = jnp.pad(jnp.cumsum(m3, axis=1), ((0, 0), (1, 0), (0, 0)))
+    # per-(s, r): # t with t.c == s.c and t.a == r.a  (range-sum of prefixes)
+    g = (jnp.take_along_axis(pre, hi[:, :, None], axis=1)
+         - jnp.take_along_axis(pre, lo[:, :, None], axis=1))     # [B, Cs, Cr]
+    e = (sb[:, :, None] == rb[:, None, :]).astype(jnp.int32)     # [B, Cs, Cr]
+    return jnp.sum(e * g, axis=(1, 2)).astype(jnp.int32)
+
+
+def _fused_cyclic_pairidx_ref(ra, rb, sb, sc, tc, ta):
+    """Pair-index realization of the fused cyclic sweep (CPU hot path).
+
+    Same shapes/contract as ``_fused_cyclic_ref``; the T stream is lex-sorted
+    into a (c, a)-pair index once per bucket, then every (cell, f) step probes
+    it with searchsorted range scans instead of all-pairs compares.
+    """
+    hp, gp, uh, ug, cr = ra.shape
+    _, fp, _, cs = sb.shape
+    _, _, _, ct = tc.shape
+    tcs, tas = lex_sort_pairs(tc, ta)            # [hp, fp, uh, Ct]
+    b = hp * gp * uh * ug
+    ra_f = ra.reshape(b, cr)
+    rb_f = rb.reshape(b, cr)
+
+    def bcast(x, shape):
+        return jnp.broadcast_to(x, shape).reshape((b,) + x.shape[-1:])
+
+    def f_step(acc, ys):
+        sb_f, sc_f, tcs_f, tas_f = ys            # [gp,ug,Cs], [hp,uh,Ct]
+        s_shape = (hp, gp, uh, ug, cs)
+        t_shape = (hp, gp, uh, ug, ct)
+        c = _pairidx_cell_counts(
+            ra_f, rb_f,
+            bcast(sb_f[None, :, None, :, :], s_shape),
+            bcast(sc_f[None, :, None, :, :], s_shape),
+            bcast(tcs_f[:, None, :, None, :], t_shape),
+            bcast(tas_f[:, None, :, None, :], t_shape))
+        return acc + c.reshape(hp, gp, uh, ug), None
+
+    acc, _ = jax.lax.scan(
+        f_step, jnp.zeros((hp, gp, uh, ug), jnp.int32),
+        (sb.transpose(1, 0, 2, 3), sc.transpose(1, 0, 2, 3),
+         tcs.transpose(1, 0, 2, 3), tas.transpose(1, 0, 2, 3)))
+    return acc
+
+
 def _fused_cyclic_ref(ra, rb, sb, sc, tc, ta):
     """ra/rb [hp,gp,uh,ug,Cr], sb/sc [gp,fp,ug,Cs], tc/ta [hp,fp,uh,Ct]
     -> [hp,gp,uh,ug] int32.  Batched over the coarse grid, scanned over f."""
@@ -254,8 +334,14 @@ def fused_per_r_counts(rb, rv, sb, sc, sv, tc, tv, *,
 
 
 def fused_count3_cyclic(ra, rb, rv, sb, sc, sv, tc, ta, tv, *,
-                        use_kernel: bool = False):
-    """Fused cyclic sweep: per-cell counts [hp, gp, uh, ug] int32."""
+                        use_kernel: bool = False, pair_index: bool = True):
+    """Fused cyclic sweep: per-cell counts [hp, gp, uh, ug] int32.
+
+    ``pair_index=True`` (default) probes a sorted (c, a)-pair index of the T
+    stream with searchsorted range scans — the indexed backend that takes the
+    cyclic CPU path past the all-pairs compare bottleneck.  Set False for the
+    all-pairs contraction (the MXU-shaped formulation).
+    """
     ra = _mask(ra, rv, "r")
     rb = _mask(rb, rv, "r")
     sb = _mask(sb, sv, "s")
@@ -263,10 +349,20 @@ def fused_count3_cyclic(ra, rb, rv, sb, sc, sv, tc, ta, tv, *,
     tc = _mask(tc, tv, "t")
     ta = _mask(ta, tv, "t")
     if use_kernel:
+        # The pair-index kernel's binary-search gathers don't lower to
+        # Mosaic yet: dispatch it only where Pallas runs in interpret mode
+        # (CPU validation); compiled TPU keeps the all-pairs MXU kernel.
+        if pair_index and _interpret():
+            tcs, tas = lex_sort_pairs(_pad_lanes(tc, "t"), _pad_lanes(ta, "t"))
+            return bucket_join.fused_count3_cyclic_pairidx(
+                _pad_lanes(ra, "r"), _pad_lanes(rb, "r"), _pad_lanes(sb, "s"),
+                _pad_lanes(sc, "s"), tcs, tas, interpret=True)
         return bucket_join.fused_count3_cyclic(
             _pad_lanes(ra, "r"), _pad_lanes(rb, "r"), _pad_lanes(sb, "s"),
             _pad_lanes(sc, "s"), _pad_lanes(tc, "t"), _pad_lanes(ta, "t"),
             interpret=_interpret())
+    if pair_index:
+        return _fused_cyclic_pairidx_ref(ra, rb, sb, sc, tc, ta)
     return _fused_cyclic_ref(ra, rb, sb, sc, tc, ta)
 
 

@@ -18,7 +18,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.models import zoo
@@ -44,7 +44,6 @@ def param_logical(path: tuple[str, ...], ndim: int) -> tuple:
     leaf = names[-1]
     parent = names[-2] if len(names) >= 2 else ""
     in_moe = "moe" in names and "shared" not in names
-    in_ssm = "ssm" in names or parent in ("in_proj", "out_proj", "conv")
 
     if leaf == "table":                       # [vocab, d_model]
         base = ("p_vocab", "p_embed")

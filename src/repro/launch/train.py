@@ -16,7 +16,6 @@ mesh.  Features exercised here and asserted by tests/examples:
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 import time
 

@@ -14,7 +14,6 @@ linear in T and cheap even at T = 524288, batch 1 (long_500k).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

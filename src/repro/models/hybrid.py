@@ -131,7 +131,6 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens):
-    b = tokens.shape[0]
     dt = layers.dtype_of(cfg.dtype)
     x = layers.embed(tokens, params["embed"]["table"], dt)
     length = cache["length"]

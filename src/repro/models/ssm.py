@@ -16,7 +16,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers
-from repro.parallel import shard
 
 
 def init_ssm(key, cfg):

@@ -10,7 +10,6 @@ lowers as a single scanned block.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ for the audio/vlm families; None elsewhere.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax.numpy as jnp
 

@@ -11,7 +11,8 @@ from collections import Counter, defaultdict
 import numpy as np
 import pytest
 
-import sys, pathlib
+import pathlib
+import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 # Hermetic images may lack hypothesis (a dev dependency); fall back to the
@@ -30,6 +31,19 @@ from repro.core.relation import Relation  # noqa: E402
 # --------------------------------------------------------------------------
 # data generators
 # --------------------------------------------------------------------------
+
+def skewed_keys(rng: np.random.Generator, n: int, d: int, frac: float,
+                heavy: int = 1) -> np.ndarray:
+    """Adversarial keys: a heavy hitter owning ``frac`` of all rows (a
+    single hash bucket must absorb it — no salt can spread one key); the
+    remaining rows are uniform over [0, d)."""
+    n_heavy = int(n * frac)
+    vals = np.concatenate([
+        np.full(n_heavy, heavy, np.int32),
+        rng.integers(0, d, size=n - n_heavy).astype(np.int32)])
+    rng.shuffle(vals)
+    return vals
+
 
 def make_rel(rng: np.random.Generator, n: int, cols: tuple[str, ...],
              d: int, cap_extra: int = 0, zipf: float | None = None):

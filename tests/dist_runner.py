@@ -80,7 +80,8 @@ def main():
         failures.append(f"star3: got {int(res3.count)} want {want3} "
                         f"ovf {bool(res3.overflowed)}")
 
-    # ---- fused engine locals: one kernel launch per device --------------
+    # ---- fused engine locals + cross-device recovery --------------------
+    # (host-driven: each round is one shard_map; not wrapped in jit)
     for kind, rel3, want_k, kw in (
             ("linear", (r2, s2, t2), want2,
              dict(local_u=4, local_g=2)),
@@ -89,10 +90,71 @@ def main():
         fne = distributed.engine_count_sharded(
             mesh, "row", "col", kind, shuffle_slack=4.0, local_slack=5.0,
             **kw)
-        rese = jax.jit(fne)(*map(place, rel3))
+        rese = fne(*map(place, rel3))
         if bool(rese.overflowed) or int(rese.count) != want_k:
             failures.append(f"engine {kind}: got {int(rese.count)} "
                             f"want {want_k} ovf {bool(rese.overflowed)}")
+
+    # ---- cross-device skew recovery: adversarial heavy hitters ----------
+    # A heavy-hitter key owns a large fraction of every relation: one
+    # device (and one bucket on it) must absorb all of it, so tight slacks
+    # guarantee overflow in round 0.  engine_count_sharded must still
+    # return the exact oracle count with overflowed == False — the §5 skew
+    # guarantee, now across devices.
+    from conftest import skewed_keys
+
+    for seed in (0, 1):
+        srng = np.random.default_rng(1000 + seed)
+
+        def skewed(n, d, frac, heavy=1):
+            return skewed_keys(srng, n, d, frac, heavy)
+
+        ra5, rb5 = skewed(160, 25, 0.5), skewed(160, 25, 0.5, 3)
+        sb5, sc5 = skewed(176, 25, 0.5, 3), skewed(176, 25, 0.5, 5)
+        tc5, ta5 = skewed(168, 25, 0.5, 5), skewed(168, 25, 0.5)
+        r5 = Relation.from_arrays(a=ra5, b=rb5)
+        s5 = Relation.from_arrays(b=sb5, c=sc5)
+        t5 = Relation.from_arrays(c=tc5, a=ta5)
+        want5 = oracle_cyclic3_count(ra5, rb5, sb5, sc5, tc5, ta5)
+        fn5 = distributed.engine_count_sharded(
+            mesh, "row", "col", "cyclic", shuffle_slack=1.2,
+            local_slack=1.0, max_rounds=2)
+        res5 = fn5(place(r5), place(s5), place(t5))
+        if bool(res5.overflowed) or int(res5.count) != want5:
+            failures.append(f"engine cyclic skew[{seed}]: got "
+                            f"{int(res5.count)} want {want5} "
+                            f"ovf {bool(res5.overflowed)}")
+
+        rb6 = skewed(144, 30, 0.6)
+        sb6, sc6 = skewed(160, 30, 0.6), skewed(160, 30, 0.4, 7)
+        tc6 = skewed(152, 30, 0.4, 7)
+        r6 = Relation.from_arrays(
+            a=rng.integers(0, 99, 144).astype(np.int32), b=rb6)
+        s6 = Relation.from_arrays(b=sb6, c=sc6)
+        t6 = Relation.from_arrays(
+            c=tc6, d=rng.integers(0, 99, 152).astype(np.int32))
+        want6 = oracle_linear3_count(rb6, sb6, sc6, tc6)
+        fn6 = distributed.engine_count_sharded(
+            mesh, "row", "col", "linear", shuffle_slack=1.2,
+            local_slack=1.0, local_u=4, local_g=2, max_rounds=2)
+        res6 = fn6(place(r6), place(s6), place(t6))
+        if bool(res6.overflowed) or int(res6.count) != want6:
+            failures.append(f"engine linear skew[{seed}]: got "
+                            f"{int(res6.count)} want {want6} "
+                            f"ovf {bool(res6.overflowed)}")
+
+    # star: skewed fact keys route most of S to one device
+    sb7 = skewed_keys(rng, 320, 25, 0.6, 9)
+    sc7 = skewed_keys(rng, 320, 25, 0.6, 11)
+    s7 = Relation.from_arrays(b=sb7, c=sc7)
+    want7 = oracle_linear3_count(rd3["b"], sb7, sc7, td3["c"])
+    fn7 = distributed.engine_count_sharded(
+        mesh, "row", "col", "star", shuffle_slack=1.2, local_slack=1.0,
+        max_rounds=2)
+    res7 = fn7(place(r3), place(s7), place(t3))
+    if bool(res7.overflowed) or int(res7.count) != want7:
+        failures.append(f"engine star skew: got {int(res7.count)} "
+                        f"want {want7} ovf {bool(res7.overflowed)}")
 
     # ---- skew: zipf keys, bigger slack must stay exact ------------------
     r4, rd4 = make_rel(rng, 160, ("a", "b"), 30, zipf=1.5)

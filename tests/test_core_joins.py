@@ -1,10 +1,7 @@
 """Core join engine vs python oracles (sorted path + bucketed path)."""
 
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
-
-import jax.numpy as jnp
 
 from repro.core import (Relation, binary_join, cyclic3, driver, linear3,
                         star3)

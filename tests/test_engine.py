@@ -10,7 +10,7 @@ from repro.core import cyclic3, driver, engine, linear3, planner, star3
 from repro.core.relation import Relation
 from repro.kernels import ops as kops
 from conftest import (make_rel, oracle_cyclic3_count, oracle_linear3_count,
-                      oracle_linear3_per_r)
+                      oracle_linear3_per_r, skewed_keys)
 
 
 def _ref_linear_count(rb, sb, sc, tc) -> int:
@@ -35,14 +35,7 @@ def _ref_cyclic_count(ra, rb, sb, sc, tc, ta) -> int:
 
 
 def _skewed(rng, n, d, heavy_frac, heavy_key=1):
-    """Adversarial keys: a heavy hitter owning `heavy_frac` of all rows (a
-    single hash bucket must absorb it — no salt can spread one key)."""
-    n_heavy = int(n * heavy_frac)
-    vals = np.concatenate([
-        np.full(n_heavy, heavy_key, np.int32),
-        rng.integers(0, d, size=n - n_heavy).astype(np.int32)])
-    rng.shuffle(vals)
-    return vals
+    return skewed_keys(rng, n, d, heavy_frac, heavy_key)
 
 
 # --------------------------------------------------------------------------
@@ -251,3 +244,132 @@ def test_planner_cyclic_always_3way(rng):
     res = ep.run(r, s, t)
     assert int(res.count) == want
     assert res.rounds >= 1
+
+
+# --------------------------------------------------------------------------
+# recovery-round contract: ONE hashing pass per relation per round
+# --------------------------------------------------------------------------
+
+def _probe_hashing(monkeypatch):
+    """Count composite_ids invocations and raw hash_bucket evaluations."""
+    from repro.core import hashing, partition
+    calls = {"composite": 0, "hash": 0}
+    orig_ci = partition.composite_ids
+    orig_hb = hashing.hash_bucket
+
+    def ci(*a, **kw):
+        calls["composite"] += 1
+        return orig_ci(*a, **kw)
+
+    def hb(*a, **kw):
+        calls["hash"] += 1
+        return orig_hb(*a, **kw)
+
+    monkeypatch.setattr(partition, "composite_ids", ci)
+    monkeypatch.setattr(hashing, "hash_bucket", hb)
+    return calls
+
+
+def test_one_hash_pass_per_relation_per_round(rng, monkeypatch):
+    """Histograms, layouts and residual masks must all derive from a single
+    composite_ids pass per relation per round (the recovery-round contract);
+    hash_bucket runs once per spec level, never more."""
+    levels = {"linear": 2 + 3 + 1, "cyclic": 4 + 3 + 3, "star": 1 + 2 + 1}
+    for kind in ("linear", "cyclic", "star"):
+        t_cols = ("c", "a") if kind == "cyclic" else ("c", "d")
+        rb = _skewed(rng, 200, 30, 0.5)
+        r = Relation.from_arrays(a=_skewed(rng, 200, 30, 0.5), b=rb)
+        s = Relation.from_arrays(b=_skewed(rng, 220, 30, 0.5, 3),
+                                 c=_skewed(rng, 220, 30, 0.5, 5))
+        t = Relation.from_arrays(**{t_cols[0]: _skewed(rng, 210, 30, 0.5, 5),
+                                    t_cols[1]: _skewed(rng, 210, 30, 0.5)})
+        if kind == "linear":
+            plan = linear3.default_plan(200, 220, 210, m_budget=64, u=4,
+                                        slack=1.2)
+        elif kind == "cyclic":
+            plan = cyclic3.default_plan(200, 220, 210, m_budget=48, uh=2,
+                                        ug=2, slack=1.2)
+        else:
+            plan = star3.default_plan(200, 220, 210, uh=4, ug=4, chunks=2,
+                                      slack=1.2)
+        calls = _probe_hashing(monkeypatch)
+        res = engine.MultiwayJoinEngine(kind).count(r, s, t, plan)
+        assert res.rounds > 1, f"{kind}: skew did not trigger recovery"
+        assert calls["composite"] == 3 * res.rounds, (
+            f"{kind}: {calls['composite']} composite passes over "
+            f"{res.rounds} rounds — want exactly one per relation per round")
+        assert calls["hash"] == levels[kind] * res.rounds, (
+            f"{kind}: {calls['hash']} hash_bucket calls, want "
+            f"{levels[kind]} per round x {res.rounds} rounds")
+        monkeypatch.undo()
+
+
+# --------------------------------------------------------------------------
+# int64 totals: > 2^31 cardinality must not wrap
+# --------------------------------------------------------------------------
+
+def test_int64_total_over_2e31(rng):
+    """Regression: EngineResult.count used to accumulate via jnp int32 and
+    silently wrapped past 2^31.  A uniform d=64 self-join at n=22000 has
+    ~2.6e9 results (each per-cell partial stays < 2^31 — the kernels' int32
+    cell contract — but the total does not fit int32)."""
+    n, d = 22000, 64
+    rd = {c: rng.integers(0, d, n).astype(np.int32) for c in ("a", "b")}
+    sd = {c: rng.integers(0, d, n).astype(np.int32) for c in ("b", "c")}
+    td = {c: rng.integers(0, d, n).astype(np.int32) for c in ("c", "d")}
+    r = Relation.from_arrays(**rd)
+    s = Relation.from_arrays(**sd)
+    t = Relation.from_arrays(**td)
+    want = oracle_linear3_count(rd["b"], sd["b"], sd["c"], td["c"])
+    assert want > 2**31, "shape no longer exercises the int64 regression"
+    plan = linear3.default_plan(n, n, n, m_budget=4096, u=8)
+    res = engine.MultiwayJoinEngine("linear").count(r, s, t, plan)
+    assert int(res.count) == want
+    assert np.asarray(res.count).dtype == np.int64
+    assert not bool(res.overflowed)
+
+
+def test_per_r_counts_are_int64(rng):
+    r, rd = make_rel(rng, 120, ("a", "b"), 25)
+    s, sd = make_rel(rng, 140, ("b", "c"), 25)
+    t, td = make_rel(rng, 130, ("c", "d"), 25)
+    plan = linear3.default_plan(120, 140, 130, m_budget=48, u=4)
+    res = driver.engine_per_r_counts(r, s, t, plan)
+    assert np.asarray(res.counts).dtype == np.int64
+
+
+# --------------------------------------------------------------------------
+# cyclic pair-index backend == all-pairs == Pallas kernels
+# --------------------------------------------------------------------------
+
+def test_cyclic_pairidx_matches_allpairs_and_kernels(rng):
+    """The sorted (c, a)-pair-index backend is the same function as the
+    all-pairs contraction, on both the jnp and the (interpret-mode) Pallas
+    fused paths."""
+    r, _ = make_rel(rng, 300, ("a", "b"), 40)
+    s, _ = make_rel(rng, 320, ("b", "c"), 40)
+    t, _ = make_rel(rng, 280, ("c", "a"), 40)
+    plan = cyclic3.default_plan(300, 320, 280, m_budget=96, uh=4, ug=2,
+                                slack=4.0)
+    rg, sg, tg = engine.cyclic3_layouts(r, s, t, plan)
+    args = (rg.columns["a"], rg.columns["b"], rg.valid, sg.columns["b"],
+            sg.columns["c"], sg.valid, tg.columns["c"], tg.columns["a"],
+            tg.valid)
+    base = np.asarray(kops.fused_count3_cyclic(*args, pair_index=False))
+    for kw in (dict(pair_index=True),
+               dict(pair_index=True, use_kernel=True),
+               dict(pair_index=False, use_kernel=True)):
+        got = np.asarray(kops.fused_count3_cyclic(*args, **kw))
+        np.testing.assert_array_equal(got, base, err_msg=str(kw))
+
+
+def test_cyclic_fused_pairidx_matches_scan_driver(rng):
+    r, _ = make_rel(rng, 400, ("a", "b"), 50)
+    s, _ = make_rel(rng, 420, ("b", "c"), 50)
+    t, _ = make_rel(rng, 380, ("c", "a"), 50)
+    plan = cyclic3.default_plan(400, 420, 380, m_budget=96, uh=4, ug=2,
+                                slack=4.0)
+    res_scan, grown_plan = driver.cyclic3_count_auto(r, s, t, plan)
+    res_pair = engine.cyclic3_count_fused(r, s, t, grown_plan,
+                                          pair_index=True)
+    assert int(res_pair.count) == int(res_scan.count)

@@ -128,3 +128,80 @@ def test_composite_ids_lexicographic(rng):
     hx = np.asarray(hashing.hash_bucket(jnp.asarray(data["x"]), 4, "H"))
     gy = np.asarray(hashing.hash_bucket(jnp.asarray(data["y"]), 8, "g"))
     np.testing.assert_array_equal(np.asarray(ids)[:64], hx * 8 + gy)
+
+
+def test_composite_ids_int32_guard(rng):
+    """Deep/wide specs whose flat id space exceeds int32 must fail loudly —
+    a silent wrap would scatter rows into wrong buckets."""
+    import pytest
+
+    rel, _ = make_rel(rng, 16, ("x", "y"), 10)
+    # 70000 * 70000 = 4.9e9 > 2^31 - 1
+    with pytest.raises(ValueError, match="int32"):
+        partition.composite_ids(rel, [("x", 70000, "H"), ("y", 70000, "g")])
+    # a capacity blowing the flat slot space is caught too
+    with pytest.raises(ValueError, match="int32"):
+        partition.bucketize_by_ids(
+            rel, jnp.zeros(16, jnp.int32), 70000, 70000, (70000,))
+    # the boundary itself is fine
+    ids, total = partition.composite_ids(rel, [("x", 46341, "H"),
+                                               ("y", 46340, "g")])
+    assert total == 46341 * 46340 <= 2**31 - 1
+
+
+def test_sentinel_constant_unified():
+    """ONE padding sentinel everywhere, side sentinels derived and distinct:
+    no sentinel can equal a live key (>= -2^30) or another side's."""
+    import inspect
+
+    from repro.core.relation import SENTINEL, sentinel_fill
+    from repro.kernels import ops
+
+    assert inspect.signature(partition.bucketize).parameters[
+        "sentinel"].default == SENTINEL
+    assert inspect.signature(partition.bucketize_by_ids).parameters[
+        "sentinel"].default == SENTINEL
+    assert inspect.signature(sentinel_fill).parameters[
+        "sentinel"].default == SENTINEL
+    sents = set(ops._SENT.values()) | {SENTINEL, ops.SENT_BASE}
+    assert len(sents) == len(ops._SENT) + 2          # all distinct
+    assert all(s < -(2**30) for s in sents)          # below the key floor
+
+
+def test_sentinel_rows_never_false_match(rng):
+    """Invalid rows carrying ADVERSARIAL key values — another side's probe
+    sentinel, the padding sentinel itself — must never join with anything:
+    counts equal the oracle over valid rows only."""
+    from conftest import oracle_linear3_count
+    from repro.core import linear3, engine
+    from repro.core.relation import SENTINEL
+    from repro.kernels import ops as kops_
+
+    n, d = 120, 20
+    adversarial = np.asarray(
+        [SENTINEL, kops_.SENT_BASE] + list(kops_._SENT.values()),
+        np.int32)
+
+    def poisoned(cols):
+        """Relation with 24 invalid tail rows holding sentinel-ish keys."""
+        rel = Relation.from_arrays(capacity=n + 24, **cols)
+        poison = {
+            k: jnp.asarray(np.concatenate(
+                [np.asarray(v, np.int32),
+                 np.resize(adversarial, 24)]))
+            for k, v in cols.items()}
+        return Relation(poison, rel.valid)
+
+    rd = {c: rng.integers(0, d, n).astype(np.int32) for c in ("a", "b")}
+    sd = {c: rng.integers(0, d, n).astype(np.int32) for c in ("b", "c")}
+    td = {c: rng.integers(0, d, n).astype(np.int32) for c in ("c", "d")}
+    r, s, t = poisoned(rd), poisoned(sd), poisoned(td)
+    want = oracle_linear3_count(rd["b"], sd["b"], sd["c"], td["c"])
+
+    plan = linear3.default_plan(n, n, n, m_budget=48, u=4, slack=4.0)
+    res = engine.linear3_count_fused(r, s, t, plan)
+    assert int(res.count) == want
+    # the bucketized layouts pad dead slots with the canonical sentinel
+    rg, sg, tg = engine.linear3_layouts(r, s, t, plan)
+    dead = np.asarray(rg.columns["b"])[~np.asarray(rg.valid)]
+    assert (dead == SENTINEL).all()

@@ -6,7 +6,7 @@ import pytest
 
 import jax.numpy as jnp
 
-from repro.kernels import bucket_join, ops, radix_hist, ref
+from repro.kernels import ops, ref
 
 
 def _mk(rng, b, c, d, side):
