@@ -40,13 +40,31 @@ def main() -> int:
     base = json.loads(pathlib.Path(args.baseline).read_text())
     new = json.loads(pathlib.Path(args.new).read_text())
     failures = []
-    for name, b in base.get("shapes", {}).items():
-        n = new.get("shapes", {}).get(name)
+    base_shapes = base.get("shapes", {})
+    new_shapes = new.get("shapes", {})
+    # shapes a NEWER bench emits that the committed baseline predates are
+    # fine (the next baseline refresh picks them up) — warn, don't fail,
+    # and never KeyError on them
+    for name in sorted(set(new_shapes) - set(base_shapes)):
+        print(f"  [NEW] {name}: not in committed baseline — not gated")
+    for name, b in base_shapes.items():
+        n = new_shapes.get(name)
         if n is None:
             failures.append(f"{name}: shape missing from new run")
             continue
         if not n.get("match", False):
             failures.append(f"{name}: fused/scan counts diverged")
+            continue
+        if "speedup" not in b:
+            # non-ratio shapes (e.g. the session plan-cache entry) carry
+            # no scan/fused speedup; their gate is the match flag above
+            print(f"  [OK ] {name}: no speedup ratio (match-only gate)")
+            continue
+        if "speedup" not in n:
+            # the baseline gated a ratio here — a new run silently losing
+            # it would disable the gate, so treat it as a failure
+            failures.append(f"{name}: 'speedup' missing from new run "
+                            "(baseline has one)")
             continue
         floor = b["speedup"] * (1.0 - args.tolerance)
         status = "OK " if n["speedup"] >= floor else "REG"

@@ -5,8 +5,8 @@ G_bkt and stream-bound at large."""
 
 from __future__ import annotations
 
+from benchmarks.common import claim, write_csv
 from repro.perfmodel import PLASTICINE, binary_cascade_time
-from benchmarks.common import write_csv, claim
 
 N, D = 2e8, 7e5
 

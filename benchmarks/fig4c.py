@@ -6,9 +6,9 @@ TREND, per DESIGN.md §7."""
 
 from __future__ import annotations
 
-from repro.perfmodel import CPU_XEON, PLASTICINE, binary_cascade_time, \
-    cpu_cascade_time
-from benchmarks.common import write_csv, claim
+from benchmarks.common import claim, write_csv
+from repro.perfmodel import (CPU_XEON, PLASTICINE, binary_cascade_time,
+                             cpu_cascade_time)
 
 
 def main(results: dict | None = None):

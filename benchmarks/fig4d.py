@@ -6,8 +6,8 @@ larger R partitions (small H_bkt) are better."""
 
 from __future__ import annotations
 
+from benchmarks.common import claim, write_csv
 from repro.perfmodel import PLASTICINE, linear3_time
-from benchmarks.common import write_csv, claim
 
 N, D = 2e8, 7e5
 

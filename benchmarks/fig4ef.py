@@ -14,8 +14,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from benchmarks.common import claim, write_csv
 from repro.perfmodel import PLASTICINE, binary_cascade_time, linear3_time
-from benchmarks.common import write_csv, claim
 
 
 def speedup(n, d, hw):

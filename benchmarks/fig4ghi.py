@@ -6,8 +6,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.perfmodel import PLASTICINE, star3_time, star3_binary_time
-from benchmarks.common import write_csv, claim
+from benchmarks.common import claim, write_csv
+from repro.perfmodel import PLASTICINE, star3_binary_time, star3_time
 
 N = 1e9               # fact relation
 

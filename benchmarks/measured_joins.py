@@ -8,14 +8,13 @@ from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
-import jax
-
+from benchmarks.common import claim, write_csv
 from repro.core import (cascaded_binary_count, linear3_count,
                         linear3_default_plan)
 from repro.data.relations import RelGenConfig, gen_relation
-from benchmarks.common import write_csv, claim
 
 
 def _rst(n, d):

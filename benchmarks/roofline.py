@@ -8,7 +8,7 @@ from __future__ import annotations
 import json
 import pathlib
 
-from benchmarks.common import write_csv, claim
+from benchmarks.common import claim, write_csv
 
 DRYRUN_DIR = pathlib.Path("artifacts/dryrun")
 

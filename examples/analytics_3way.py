@@ -6,9 +6,12 @@ of-friends) and Example 2 (triangles) on a synthetic social graph.
 
 Pipeline (all on the join engine, aggregates only — nothing materialized):
   1. generate a friends relation F (n = users·friends edges),
-  2. linear self 3-way  F ⋈ F ⋈ F with per-user COUNT + Flajolet-Martin
-     DISTINCT sketch (the paper's footnote-4 aggregation),
-  3. cyclic 3-way (triangle count) — community cohesion metric,
+  2. declare the self 3-way F ⋈ F ⋈ F as a query graph (three aliases of
+     one relation) and execute it with per-user COUNT through ONE
+     JoinSession, plus the Flajolet-Martin DISTINCT sketch (the paper's
+     footnote-4 aggregation),
+  3. declare the triangle query (a 3-cycle in the predicate graph) —
+     community cohesion metric — on the same session,
   4. planner report: what the cost model would pick at Facebook scale.
 """
 
@@ -22,8 +25,8 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
 
 import numpy as np  # noqa: E402
 
-from repro.core import (cost_model, cyclic3, driver, linear3,  # noqa: E402
-                        sketches)
+from repro.core import (JoinSession, Query, cost_model,  # noqa: E402
+                        linear3, sketches)
 from repro.core.relation import Relation  # noqa: E402
 
 
@@ -51,28 +54,36 @@ def main():
     print(f"friends relation: {n} edges over {args.users} users "
           f"(f ≈ {n / args.users:.0f})")
 
-    r = Relation.from_arrays(a=src, b=dst)
-    s = Relation.from_arrays(b=src, c=dst)
-    t = Relation.from_arrays(c=src, d=dst)
+    friends = Relation.from_arrays(src=src, dst=dst)
+    sess = JoinSession(m_budget=max(n // 4, 2048))
 
     # --- Example 1: friends-of-friends-of-friends ------------------------
-    plan = linear3.default_plan(n, n, n, m_budget=max(n // 4, 2048))
+    # the self 3-way as a declarative query graph: one relation, three
+    # aliases, a path of equality predicates — the session classifies it
+    # as the linear chain and plans/executes/recovers in one call
+    fofof = Query(
+        relations={"f1": friends, "f2": friends, "f3": friends},
+        predicates=[("f1.dst", "f2.src"), ("f2.dst", "f3.src")])
     t0 = time.time()
-    res, plan = driver.linear3_count_auto(r, s, t, plan)
+    res = sess.execute(fofof, per_r=True, key_col="src")
     print(f"\nFoFoF paths (COUNT, with duplicates): {int(res.count):,} "
-          f"in {time.time() - t0:.2f}s; tuples read on-chip = "
-          f"{int(res.tuples_read):,}")
+          f"in {time.time() - t0:.2f}s; classified {res.kind}, strategy "
+          f"{res.strategy}; tuples read on-chip = {int(res.tuples_read):,}")
 
-    (keys, counts, valid), _ = driver.linear3_per_r_counts_auto(
-        r, s, t, plan)
-    k = np.asarray(keys)[np.asarray(valid)]
-    c = np.asarray(counts)[np.asarray(valid)]
+    k = np.asarray(res.per_r.keys)[np.asarray(res.per_r.valid)]
+    c = np.asarray(res.per_r.counts)[np.asarray(res.per_r.valid)]
     top = np.argsort(c)[-5:][::-1]
     print("top-5 users by FoFoF reach (edge-endpoint aggregation):")
     for i in top:
-        print(f"   user-edge b={k[i]}: {c[i]:,} paths")
+        print(f"   user-edge src={k[i]}: {c[i]:,} paths")
 
     # FM sketch: approximate DISTINCT d-endpoints over the whole join
+    # (sketch aggregates ride the scan driver until the fused path grows
+    # them; same relations, legacy column names)
+    r = Relation.from_arrays(a=src, b=dst)
+    s = Relation.from_arrays(b=src, c=dst)
+    t = Relation.from_arrays(c=src, d=dst)
+    plan = linear3.default_plan(n, n, n, m_budget=max(n // 4, 2048))
     regs, _fm_ovf = linear3.linear3_fm_distinct(r, s, t, plan,
                                                 n_registers=64)
     est = sketches.fm_estimate(regs)
@@ -81,13 +92,16 @@ def main():
           f"(exact {exact_d}; sketch bytes = {64 * 4})")
 
     # --- Example 2: triangles -------------------------------------------
-    t_cyc = Relation.from_arrays(c=src, a=dst)
-    cplan = cyclic3.default_plan(n, n, n, m_budget=max(n // 4, 2048))
+    # the 3-cycle predicate graph IS the triangle query
+    triangles = Query(
+        relations={"f1": friends, "f2": friends, "f3": friends},
+        predicates=[("f1.dst", "f2.src"), ("f2.dst", "f3.src"),
+                    ("f3.dst", "f1.src")])
     t0 = time.time()
-    cres, _ = driver.cyclic3_count_auto(r, s, t_cyc, cplan)
+    cres = sess.execute(triangles)
     tri = int(cres.count) // 6        # each triangle counted 6x (3! orders)
-    print(f"\ntriangles: {tri:,} (raw oriented count {int(cres.count):,}) "
-          f"in {time.time() - t0:.2f}s")
+    print(f"\ntriangles: {tri:,} (raw oriented count {int(cres.count):,}; "
+          f"classified {cres.kind}) in {time.time() - t0:.2f}s")
 
     # --- planner at Facebook scale (paper Examples 3/4) ------------------
     print("\nplanner at paper scale (N=6e11, M=16MB-chip -> 1e6 tuples):")

@@ -2,10 +2,12 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds the paper's three join shapes on small relations, checks them
-against a brute-force oracle, shows the planner's 3-way vs cascaded-binary
-decision on the paper's own workloads (Examples 3/4), and runs one Pallas
-kernel in interpret mode.
+Declares the paper's three join shapes as query graphs (the engine
+classifies linear/cyclic/star from the predicates — no kind strings),
+executes them through one ``JoinSession``, checks the counts against a
+brute-force oracle, shows the planner's 3-way vs cascaded-binary decision
+on the paper's own workloads (Examples 3/4), and runs one Pallas kernel in
+interpret mode.
 """
 
 import pathlib
@@ -14,11 +16,10 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
                        / "src"))
 
-import numpy as np  # noqa: E402
 import jax  # noqa: E402
+import numpy as np  # noqa: E402
 
-from repro.core import (cost_model, cyclic3, linear3, star3,  # noqa: E402
-                        driver)
+from repro.core import JoinSession, Query, cost_model  # noqa: E402
 from repro.data.relations import RelGenConfig, gen_relation  # noqa: E402
 
 
@@ -27,38 +28,60 @@ def main():
     r = gen_relation(RelGenConfig(n=rng_n, d=d, columns=("a", "b"), seed=1))
     s = gen_relation(RelGenConfig(n=rng_n, d=d, columns=("b", "c"), seed=2))
     t = gen_relation(RelGenConfig(n=rng_n, d=d, columns=("c", "d"), seed=3))
+    sess = JoinSession(m_budget=1024)
 
     # --- linear 3-way: R(AB) ⋈ S(BC) ⋈ T(CD), COUNT aggregated ---------
-    plan = linear3.default_plan(rng_n, rng_n, rng_n, m_budget=1024)
-    res, plan = driver.linear3_count_auto(r, s, t, plan)
+    # a path-shaped predicate graph with balanced cardinalities
+    q = Query(relations={"r": r, "s": s, "t": t},
+              predicates=[("r.b", "s.b"), ("s.c", "t.c")])
+    res = sess.execute(q)
     rb = np.asarray(r.col("b")); sb = np.asarray(s.col("b"))
     sc = np.asarray(s.col("c")); tc = np.asarray(t.col("c"))
     oracle = int(((rb[:, None] == sb[None, :]).sum(0).astype(np.int64)
                   * (sc[:, None] == tc[None, :]).sum(1)).sum())
-    print(f"linear 3-way COUNT = {int(res.count)}  (oracle {oracle})  "
-          f"tuples read on-chip = {int(res.tuples_read)}")
-    assert int(res.count) == oracle
+    print(f"{res.kind} 3-way COUNT = {int(res.count)}  (oracle {oracle})  "
+          f"strategy={res.strategy}  tuples read = {int(res.tuples_read)}")
+    assert res.kind == "linear" and int(res.count) == oracle
+    warm = sess.execute(q)       # same structure + sizes: plan-cache hit
+    print(f"warm re-execute: cache_hit={warm.cache_hit} "
+          f"(plan {warm.plan_s * 1e3:.2f} ms vs cold "
+          f"{res.plan_s * 1e3:.2f} ms)")
 
-    # --- cyclic 3-way (triangles): R(AB) ⋈ S(BC) ⋈ T(CA) ---------------
+    # --- cyclic 3-way (triangles): a 3-cycle in the predicate graph -----
     t_cyc = gen_relation(RelGenConfig(n=rng_n, d=d, columns=("c", "a"),
                                       seed=3))
-    cplan = cyclic3.default_plan(rng_n, rng_n, rng_n, m_budget=2048)
-    cres, _ = driver.cyclic3_count_auto(r, s, t_cyc, cplan)
+    cres = sess.execute(Query(
+        relations={"r": r, "s": s, "t": t_cyc},
+        predicates=[("r.b", "s.b"), ("s.c", "t.c"), ("t.a", "r.a")]),
+        m_budget=2048)
+    # dict-based oracle (the einsum contraction is O(n^3) in int64 —
+    # minutes on a small host; this is O(n * avg-degree))
+    from collections import Counter, defaultdict
     ra = np.asarray(r.col("a"))
     ta_c = np.asarray(t_cyc.col("c")); ta_a = np.asarray(t_cyc.col("a"))
-    m1 = (sb[:, None] == rb[None, :]).astype(np.int64)
-    m2 = (sc[:, None] == ta_c[None, :]).astype(np.int64)
-    m3 = (ra[:, None] == ta_a[None, :]).astype(np.int64)
-    tri = int(np.einsum("sr,st,rt->", m1, m2, m3, optimize=True))
-    print(f"cyclic 3-way (triangle) COUNT = {int(cres.count)}  "
+    s_by_b = defaultdict(list)
+    for b, c in zip(sb.tolist(), sc.tolist()):
+        s_by_b[b].append(c)
+    t_by_ca = Counter(zip(ta_c.tolist(), ta_a.tolist()))
+    tri = sum(t_by_ca.get((c, a), 0)
+              for a, b in zip(ra.tolist(), rb.tolist())
+              for c in s_by_b.get(b, ()))
+    print(f"{cres.kind} 3-way (triangle) COUNT = {int(cres.count)}  "
           f"(oracle {tri})")
-    assert int(cres.count) == tri
+    assert cres.kind == "cyclic" and int(cres.count) == tri
 
-    # --- star 3-way (fact S, dims R and T) -------------------------------
-    splan = star3.default_plan(rng_n, rng_n, rng_n, m_budget=8192)
-    sres, _ = driver.star3_count_auto(r, s, t, splan)
-    print(f"star 3-way COUNT = {int(sres.count)}  (oracle {oracle})")
-    assert int(sres.count) == oracle
+    # --- star 3-way: same path graph, hub cardinality ≫ endpoints -------
+    dim1 = gen_relation(RelGenConfig(n=500, d=d, columns=("a", "b"), seed=4))
+    dim2 = gen_relation(RelGenConfig(n=500, d=d, columns=("c", "e"), seed=5))
+    sres = sess.execute(Query(
+        relations={"dim1": dim1, "fact": s, "dim2": dim2},
+        predicates=[("dim1.b", "fact.b"), ("fact.c", "dim2.c")]))
+    db = np.asarray(dim1.col("b")); dc = np.asarray(dim2.col("c"))
+    s_oracle = int(((db[:, None] == sb[None, :]).sum(0).astype(np.int64)
+                    * (sc[:, None] == dc[None, :]).sum(1)).sum())
+    print(f"{sres.kind} 3-way COUNT = {int(sres.count)} "
+          f"(oracle {s_oracle})")
+    assert sres.kind == "star" and int(sres.count) == s_oracle
 
     # --- the paper's planner decisions (Examples 3 and 4) ----------------
     m3_thresh = cost_model.example3_threshold_m()

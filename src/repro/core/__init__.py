@@ -1,6 +1,9 @@
 """Core multiway hash-join engine (the paper's contribution).
 
 Public API:
+  Query / JoinSession      — the declarative front door: relations + join
+                             predicates in, classified + planned + executed
+                             + skew-recovered QueryResult out (plan-cached)
   Relation                 — fixed-capacity columnar relation
   MultiwayJoinEngine       — fused partition-sweep engine + skew recovery
   linear3_count_fused / cyclic3_count_fused / star3_count_fused
@@ -12,18 +15,22 @@ Public API:
   cost_model               — the paper's tuple-traffic analysis
 """
 
-from repro.core.relation import Relation  # noqa: F401
+from repro.core import cost_model, hashing, partition, sketches  # noqa: F401
+from repro.core.binary_join import (  # noqa: F401
+    bucketed_join_count, cascaded_binary_count, cascaded_binary_per_r_counts,
+    join_count, join_materialize, probe_weight_sum)
+from repro.core.cyclic3 import Cyclic3Plan, cyclic3_count  # noqa: F401
+from repro.core.cyclic3 import default_plan as cyclic3_default_plan  # noqa: F401
 from repro.core.engine import (  # noqa: F401
     EngineResult, MultiwayJoinEngine, PerRResult, cyclic3_count_fused,
     linear3_count_fused, star3_count_fused)
-from repro.core.binary_join import (  # noqa: F401
-    cascaded_binary_count, cascaded_binary_per_r_counts, join_count,
-    join_materialize, probe_weight_sum, bucketed_join_count)
 from repro.core.linear3 import (  # noqa: F401
-    Linear3Plan, linear3_count, linear3_per_r_counts, linear3_fm_distinct)
-from repro.core.cyclic3 import Cyclic3Plan, cyclic3_count  # noqa: F401
-from repro.core.star3 import Star3Plan, star3_count  # noqa: F401
-from repro.core import cost_model, hashing, partition, sketches  # noqa: F401
+    Linear3Plan, linear3_count, linear3_fm_distinct, linear3_per_r_counts)
 from repro.core.linear3 import default_plan as linear3_default_plan  # noqa: F401
-from repro.core.cyclic3 import default_plan as cyclic3_default_plan  # noqa: F401
+from repro.core.query import (  # noqa: F401
+    Binding, Classification, Query, QueryError, QueryGraphError,
+    QuerySchemaError)
+from repro.core.relation import Relation  # noqa: F401
+from repro.core.session import JoinSession, QueryResult  # noqa: F401
+from repro.core.star3 import Star3Plan, star3_count  # noqa: F401
 from repro.core.star3 import default_plan as star3_default_plan  # noqa: F401

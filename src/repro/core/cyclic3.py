@@ -42,7 +42,7 @@ class Cyclic3Plan(NamedTuple):
 class Cyclic3Result(NamedTuple):
     count: jnp.ndarray
     overflowed: jnp.ndarray
-    tuples_read: jnp.ndarray
+    tuples_read: object      # int32 (scan) | engine.Traffic64 (fused)
 
 
 def default_plan(n_r: int, n_s: int, n_t: int, *, m_budget: int,

@@ -36,6 +36,11 @@ The same functions compile on the 2-pod production mesh: the "pod" axis is
 folded into "row" (joins scale out along rows; the extra hop is the paper's
 multi-chip case, and the collective-term roofline in EXPERIMENTS.md
 quantifies it).
+
+Declarative entry: ``session.JoinSession.execute_sharded(query, mesh, row,
+col)`` classifies the query's predicate graph, re-keys the relations to the
+canonical routing columns via the binding, and dispatches here — the
+``kind=`` string below is the internal dispatch key, not user API.
 """
 
 from __future__ import annotations

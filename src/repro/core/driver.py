@@ -11,22 +11,37 @@ per-bucket capacities geometrically (and optionally re-salt the hash
 functions) and re-run.  Capacities are static shapes, so each retry re-jits;
 retries are rare under the plan defaults and the cost is off the hot path.
 
-``engine_count`` is the preferred entry point: it dispatches to the fused
-``core.engine.MultiwayJoinEngine``, which keeps the exact partitions from
-the first pass and re-runs only the skewed shards (one fused kernel launch
-per round instead of h_parts × g_parts of them).  The ``*_auto`` whole-query
-retry drivers remain as the scan-based baseline.
+DEPRECATED: the declarative front door replaces this module.  Build a
+``core.query.Query`` (named relations + join predicates — the kind is
+inferred from the predicate graph) and execute it through
+``core.session.JoinSession``; see README "Writing a query" for the
+migration table.  ``engine_count`` / ``engine_per_r_counts`` remain as thin
+shims that construct the Query internally; the ``*_auto`` whole-query retry
+drivers remain only as the scan-based baseline the fused engine is
+benchmarked against.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Any
 
+import jax.numpy as jnp
+
 from repro.core import cyclic3, engine, linear3, recovery, star3
+from repro.core.query import _legacy_query
+from repro.core.session import JoinSession
 
 
 class OverflowError_(RuntimeError):
     pass
+
+
+def _deprecated(old: str) -> None:
+    warnings.warn(
+        f"driver.{old} is deprecated: build a core.query.Query and execute "
+        "it through core.session.JoinSession (the kind is inferred from "
+        "the predicate graph)", DeprecationWarning, stacklevel=3)
 
 
 def engine_count(kind: str, r, s, t, plan=None, *, m_budget: int | None = None,
@@ -34,21 +49,37 @@ def engine_count(kind: str, r, s, t, plan=None, *, m_budget: int | None = None,
                  growth: float = 2.0, base_salt: int = 0,
                  **cols) -> engine.EngineResult:
     """Fused-engine count with surgical skew recovery (exact by
-    construction; ``overflowed`` is always False on return)."""
-    eng = engine.MultiwayJoinEngine(kind, use_kernel=use_kernel,
-                                    max_rounds=max_rounds, growth=growth,
-                                    base_salt=base_salt)
-    return eng.count(r, s, t, plan, m_budget=m_budget, **cols)
+    construction; ``overflowed`` is always False on return).
+
+    Deprecation shim: constructs the ``Query`` the (kind, columns) pair
+    implies and executes it through a ``JoinSession``.
+    """
+    _deprecated("engine_count")
+    query, cls_ = _legacy_query(kind, r, s, t, cols)
+    sess = JoinSession(m_budget=m_budget, use_kernel=use_kernel,
+                       max_rounds=max_rounds, growth=growth,
+                       base_salt=base_salt)
+    qr = sess.execute(query, plan=plan, strategy="3way",
+                      classification=cls_)
+    return engine.EngineResult(qr.count, jnp.asarray(qr.overflowed),
+                               qr.tuples_read, qr.rounds)
 
 
 def engine_per_r_counts(r, s, t, plan, *, use_kernel: bool = False,
                         max_rounds: int = 3, growth: float = 2.0,
-                        base_salt: int = 0, **cols) -> engine.PerRResult:
-    """Fused-engine per-R-tuple counts (Example 1) with skew recovery."""
-    eng = engine.MultiwayJoinEngine("linear", use_kernel=use_kernel,
-                                    max_rounds=max_rounds, growth=growth,
-                                    base_salt=base_salt)
-    return eng.per_r_counts(r, s, t, plan, **cols)
+                        base_salt: int = 0, key_col: str = "a",
+                        **cols) -> engine.PerRResult:
+    """Fused-engine per-R-tuple counts (Example 1) with skew recovery.
+
+    Deprecation shim over ``JoinSession.execute(..., per_r=True)``.
+    """
+    _deprecated("engine_per_r_counts")
+    query, cls_ = _legacy_query("linear", r, s, t, cols)
+    sess = JoinSession(use_kernel=use_kernel, max_rounds=max_rounds,
+                       growth=growth, base_salt=base_salt)
+    qr = sess.execute(query, plan=plan, strategy="3way",
+                      classification=cls_, per_r=True, key_col=key_col)
+    return qr.per_r
 
 
 def _grown(plan: Any, growth: float, align: int = 8) -> Any:

@@ -30,12 +30,71 @@ shard_map safe); ``MultiwayJoinEngine`` adds the host-side recovery loop.
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
 from repro.core import cyclic3, linear3, partition, recovery, star3
 from repro.core.recovery import EngineResult, PerRResult  # noqa: F401  (re-export)
 from repro.core.relation import Relation
 from repro.kernels import ops as kops
 
-import jax.numpy as jnp
+
+# ==========================================================================
+# int64-exact traffic counters (without jax_enable_x64)
+# ==========================================================================
+
+_MASK15 = 0x7FFF
+_MASK30 = (1 << 30) - 1
+
+
+class Traffic64(NamedTuple):
+    """A tuples-read total as two int32 limbs (lo < 2^30, hi = value >> 30).
+
+    x64 stays off framework-wide, so a traced ``h_parts * t.n`` product
+    must not be computed in int32 — large sweeps wrap (h_parts=1024 over a
+    4M-row T is already 2^32).  Same trick as the psum limbs in
+    ``distributed._round_sharded``; ``int()`` recombines host-side.
+    """
+
+    hi: jnp.ndarray              # () int32, units of 2^30
+    lo: jnp.ndarray              # () int32, < 2^30
+
+    def __int__(self) -> int:
+        return (int(self.hi) << 30) + int(self.lo)
+
+
+def traffic64(terms) -> Traffic64:
+    """Σ k·n over ``(static int k, traced int32 scalar n)`` terms, exactly.
+
+    Every intermediate product stays below 2^31: k splits statically into
+    15-bit limbs, n dynamically (n < 2^31 ⇒ n >> 15 < 2^16), and carries
+    propagate after each partial product.  Supports totals up to 2^61.
+    """
+    hi = jnp.int32(0)
+    lo = jnp.int32(0)
+
+    def add(hi, lo, v):
+        lo = lo + (v & _MASK30)
+        hi = hi + (v >> 30) + ((lo >> 30) & 1)
+        return hi, lo & _MASK30
+
+    for k, n in terms:
+        k = int(k)
+        if k == 0:
+            continue
+        if not 0 < k < 2**31:
+            raise ValueError(f"static traffic multiplier {k} out of range")
+        k_hi, k_lo = divmod(k, 1 << 15)
+        n = jnp.asarray(n, jnp.int32)
+        n_hi = n >> 15
+        n_lo = n & _MASK15
+        hi, lo = add(hi, lo, jnp.int32(k_lo) * n_lo)
+        for m in (jnp.int32(k_hi) * n_lo, jnp.int32(k_lo) * n_hi):
+            hi, lo = add(hi, lo, (m & _MASK15) << 15)
+            hi = hi + (m >> 15)
+        hi = hi + jnp.int32(k_hi) * n_hi
+    return Traffic64(hi, lo)
 
 
 # ==========================================================================
@@ -113,9 +172,8 @@ def linear3_count_fused(r: Relation, s: Relation, t: Relation,
                                  sg.columns[sc], sg.valid, tg.columns[tc],
                                  tg.valid, use_kernel=use_kernel)
     overflow = rg.overflowed | sg.overflowed | tg.overflowed
-    tuples = r.n + s.n + plan.h_parts * t.n
-    return linear3.Linear3Result(jnp.sum(c), overflow,
-                                 tuples.astype(jnp.int32))
+    tuples = traffic64([(1, r.n), (1, s.n), (plan.h_parts, t.n)])
+    return linear3.Linear3Result(jnp.sum(c), overflow, tuples)
 
 
 def cyclic3_count_fused(r: Relation, s: Relation, t: Relation,
@@ -135,9 +193,9 @@ def cyclic3_count_fused(r: Relation, s: Relation, t: Relation,
                                  use_kernel=use_kernel,
                                  pair_index=pair_index)
     overflow = rg.overflowed | sg.overflowed | tg.overflowed
-    tuples = r.n + plan.h_parts * s.n + plan.g_parts * t.n
-    return cyclic3.Cyclic3Result(jnp.sum(c), overflow,
-                                 tuples.astype(jnp.int32))
+    tuples = traffic64([(1, r.n), (plan.h_parts, s.n),
+                        (plan.g_parts, t.n)])
+    return cyclic3.Cyclic3Result(jnp.sum(c), overflow, tuples)
 
 
 def star3_count_fused(r: Relation, s: Relation, t: Relation,
@@ -151,8 +209,8 @@ def star3_count_fused(r: Relation, s: Relation, t: Relation,
                                sg.columns[sc], sg.valid, tg.columns[tc],
                                tg.valid, use_kernel=use_kernel)
     overflow = rg.overflowed | sg.overflowed | tg.overflowed
-    tuples = r.n + s.n + t.n
-    return star3.Star3Result(jnp.sum(c), overflow, tuples.astype(jnp.int32))
+    tuples = traffic64([(1, r.n), (1, s.n), (1, t.n)])
+    return star3.Star3Result(jnp.sum(c), overflow, tuples)
 
 
 # ==========================================================================
@@ -203,13 +261,23 @@ class MultiwayJoinEngine:
     # -- execution ---------------------------------------------------------
 
     def count(self, r: Relation, s: Relation, t: Relation, plan=None, *,
-              m_budget: int | None = None, **cols) -> EngineResult:
+              m_budget: int | None = None, binding=None,
+              **cols) -> EngineResult:
+        """Exact skew-recovered COUNT.  Column names come from ``binding``
+        (a ``query.Binding`` — the recovery KindOps are built from it) or
+        the legacy per-kind ``rb=/sb=/...`` kwargs."""
         if plan is None:
             if m_budget is None:
                 raise ValueError("pass a plan or m_budget")
             plan = self.default_plan(int(r.n), int(s.n), int(t.n),
                                      m_budget=m_budget)
-        ops = recovery.OPS[self.kind](**cols)
+        if binding is not None:
+            if binding.kind != self.kind:
+                raise ValueError(f"binding classified {binding.kind!r}, "
+                                 f"engine built for {self.kind!r}")
+            ops = binding.kind_ops()
+        else:
+            ops = recovery.OPS[self.kind](**cols)
         return recovery.run_count_rounds(
             ops, r, s, t, plan, max_rounds=self.max_rounds,
             growth=self.growth, use_kernel=self.use_kernel,
@@ -219,12 +287,16 @@ class MultiwayJoinEngine:
 
     def per_r_counts(self, r: Relation, s: Relation, t: Relation, plan, *,
                      rb: str = "b", sb: str = "b", sc: str = "c",
-                     tc: str = "c", key_col: str = "a") -> PerRResult:
+                     tc: str = "c", key_col: str = "a",
+                     binding=None) -> PerRResult:
         """Per-R-tuple counts (Example 1) with skew recovery.  Returns
         flattened (keys, counts, valid) concatenated across rounds."""
         if self.kind != "linear":
             raise ValueError("per_r_counts is a linear-join aggregate")
-        ops = recovery.LinearOps(rb=rb, sb=sb, sc=sc, tc=tc)
+        if binding is not None:
+            ops = binding.kind_ops()
+        else:
+            ops = recovery.LinearOps(rb=rb, sb=sb, sc=sc, tc=tc)
         return recovery.run_per_r_rounds(
             ops, r, s, t, plan, max_rounds=self.max_rounds,
             growth=self.growth, use_kernel=self.use_kernel,

@@ -43,7 +43,9 @@ class Linear3Plan(NamedTuple):
 class Linear3Result(NamedTuple):
     count: jnp.ndarray           # () int32 total join cardinality
     overflowed: jnp.ndarray      # () bool — any bucket overflow (skew signal)
-    tuples_read: jnp.ndarray     # () int32 tuples streamed on-chip (cost metric)
+    tuples_read: object          # tuples streamed on-chip (cost metric):
+    #   () int32 on the scan driver, engine.Traffic64 (int64-exact limb
+    #   pair, int() to read) on the fused path — h_parts * |T| wraps int32
 
 
 def default_plan(n_r: int, n_s: int, n_t: int, *, m_budget: int,

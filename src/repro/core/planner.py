@@ -18,10 +18,10 @@ import dataclasses
 
 from repro.core import binary_join, cyclic3, engine, linear3, star3
 from repro.core.cost_model import (  # noqa: F401  (traffic layer)
-    PlanChoice, choose_cyclic_strategy, choose_linear_strategy,
-    cascaded_binary_tuples, cyclic3_tuples, linear3_tuples)
-from repro.perfmodel import HW, PLASTICINE, binary_cascade_time, \
-    linear3_time, star3_time, star3_binary_time
+    PlanChoice, cascaded_binary_tuples, choose_cyclic_strategy,
+    choose_linear_strategy, cyclic3_tuples, linear3_tuples)
+from repro.perfmodel import (HW, PLASTICINE, binary_cascade_time,
+                             linear3_time, star3_binary_time, star3_time)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +60,11 @@ def choose_star_timed(n_r: float, n_s: float, n_t: float, d: float,
 # executable engine plans
 # --------------------------------------------------------------------------
 
+# the "no time model ran" marker: strategy forced to 3-way, time fields
+# explicitly n/a rather than a wrong estimate
+FORCED_3WAY_CHOICE = TimedChoice("3way", float("nan"), float("nan"),
+                                 float("inf"), "n/a", "n/a")
+
 @dataclasses.dataclass(frozen=True)
 class EnginePlan:
     """A sized, executable query plan: the timed 3-way/cascade decision plus
@@ -75,15 +80,25 @@ class EnginePlan:
     use_kernel: bool = False
     max_rounds: int = 3
     growth: float = 2.0
+    base_salt: int = 0
 
     def build(self) -> engine.MultiwayJoinEngine:
+        # base_salt MUST flow through: a plan-level salt that build()
+        # drops would silently de-randomize every recovery round
         return engine.MultiwayJoinEngine(
             self.kind, use_kernel=self.use_kernel,
-            max_rounds=self.max_rounds, growth=self.growth)
+            max_rounds=self.max_rounds, growth=self.growth,
+            base_salt=self.base_salt)
 
-    def run(self, r, s, t, **cols) -> engine.EngineResult:
+    def run(self, r, s, t, *, binding=None, **cols) -> engine.EngineResult:
+        """Execute the chosen strategy.  Column names come from ``binding``
+        (a ``query.Binding``, the declarative path) or the legacy
+        ``rb=/sb=/...`` kwargs."""
+        if binding is not None:
+            cols = binding.col_kwargs()
         if self.strategy == "3way" or self.kind == "cyclic":
-            return self.build().count(r, s, t, self.shape_plan, **cols)
+            return self.build().count(r, s, t, self.shape_plan,
+                                      binding=binding, **cols)
         # cascade fallback: size the materialized intermediate from the
         # EXACT first-join cardinality (a cheap host-side histogram
         # product), so skewed keys can't overflow it
@@ -105,10 +120,23 @@ class EnginePlan:
                                    jnp.asarray(False), np.int64(tuples), 1)
 
 
+def forced_3way_plan(kind: str, shape_plan, *, m_budget: int | None = None,
+                     use_kernel: bool = False, max_rounds: int = 3,
+                     growth: float = 2.0, base_salt: int = 0) -> EnginePlan:
+    """An EnginePlan that always runs the fused 3-way engine with the
+    given shape plan — no time model (the cyclic query has no 2-join
+    cascade; callers with an explicit shape plan skip the planner)."""
+    return EnginePlan(kind=kind, strategy="3way", shape_plan=shape_plan,
+                      choice=FORCED_3WAY_CHOICE, m_budget=m_budget,
+                      use_kernel=use_kernel, max_rounds=max_rounds,
+                      growth=growth, base_salt=base_salt)
+
+
 def plan_query(kind: str, n_r: int, n_s: int, n_t: int, d: float, *,
                m_budget: int | None = None, hw: HW = PLASTICINE,
                use_kernel: bool = False, max_rounds: int = 3,
-               growth: float = 2.0, **plan_kw) -> EnginePlan:
+               growth: float = 2.0, base_salt: int = 0,
+               **plan_kw) -> EnginePlan:
     """Size a shape plan from the paper's partitioning rules AND pick the
     3-way vs cascade strategy from the Appendix-A time model — returning an
     executable plan rather than a recommendation."""
@@ -121,10 +149,8 @@ def plan_query(kind: str, n_r: int, n_s: int, n_t: int, d: float, *,
                                      **plan_kw)
     elif kind == "cyclic":
         # the cyclic (triangle) query has no 2-join cascade, so the
-        # strategy is forced; no cyclic cycle model exists yet either, so
-        # the time fields are explicitly n/a rather than a wrong estimate
-        choice = TimedChoice("3way", float("nan"), float("nan"),
-                             float("inf"), "n/a", "n/a")
+        # strategy is forced; no cyclic cycle model exists yet either
+        choice = FORCED_3WAY_CHOICE
         shape = cyclic3.default_plan(n_r, n_s, n_t, m_budget=m_budget,
                                      **plan_kw)
     elif kind == "star":
@@ -135,4 +161,4 @@ def plan_query(kind: str, n_r: int, n_s: int, n_t: int, d: float, *,
     return EnginePlan(kind=kind, strategy=choice.strategy, shape_plan=shape,
                       choice=choice, m_budget=m_budget,
                       use_kernel=use_kernel, max_rounds=max_rounds,
-                      growth=growth)
+                      growth=growth, base_salt=base_salt)

@@ -72,6 +72,7 @@ class PerRResult(NamedTuple):
     valid: jnp.ndarray           # [N] bool
     overflowed: jnp.ndarray      # () bool
     rounds: int
+    tuples_read: np.int64 = np.int64(0)   # tuples streamed, over rounds
 
 
 class RelPass(NamedTuple):
@@ -308,6 +309,13 @@ class StarOps:
 OPS = {"linear": LinearOps, "cyclic": CyclicOps, "star": StarOps}
 
 
+def ops_from_binding(binding, **kw):
+    """Build the KindOps adapter from a ``query.Binding`` — the checked
+    column binding replaces the per-kind kwarg soup, so the recovery layer
+    and the fused layouts are guaranteed to agree on column roles."""
+    return OPS[binding.kind](**binding.col_kwargs(), **kw)
+
+
 # ==========================================================================
 # the round loop
 # ==========================================================================
@@ -360,11 +368,12 @@ def run_per_r_rounds(ops: LinearOps, r: Relation, s: Relation, t: Relation,
     slots are those of exact cells (plus everything in the final round)."""
     rels = {"r": r, "s": s, "t": t}
     keys_out, counts_out, valid_out = [], [], []
-    rounds = 0
+    rounds, tuples = 0, 0
     for rnd in range(max_rounds + 1):
         final = rnd == max_rounds
         plan, passes, layouts = _round_pass(ops, rels, plan,
                                             base_salt + rnd, final)
+        tuples += ops.tuples_read(rels, plan)
         rg = layouts["r"]
         counts = kops.fused_per_r_counts(
             rg.columns[ops.rb], rg.valid, layouts["s"].columns[ops.sb],
@@ -387,4 +396,4 @@ def run_per_r_rounds(ops: LinearOps, r: Relation, s: Relation, t: Relation,
     return PerRResult(jnp.concatenate(keys_out),
                       np.concatenate(counts_out),
                       jnp.concatenate(valid_out),
-                      jnp.asarray(False), rounds)
+                      jnp.asarray(False), rounds, np.int64(tuples))

@@ -1,0 +1,252 @@
+"""JoinSession: one front door for plan → classify → execute → recover.
+
+The session owns everything between a declarative :class:`~repro.core.query.
+Query` and an exact answer:
+
+  * **classify** — the predicate-graph analysis (`Query.classify`): linear
+    chain vs triangle cycle vs star hub, no ``kind`` strings,
+  * **plan** — the traffic/time strategy decision and shape sizing from
+    ``core.planner`` (3-way vs cascaded binary on the hardware profile),
+  * **cache** — executable plans are cached by (query structure, live
+    cardinalities, m_budget, hardware, kernel flag), so repeated queries
+    skip classification and sizing entirely (the hot path for serving the
+    same parametrized query over refreshed data),
+  * **execute / recover** — the fused ``MultiwayJoinEngine`` with the
+    shared skew-recovery rounds; ``overflowed == False`` is a
+    postcondition, and every result is a uniform :class:`QueryResult`.
+
+``execute_sharded`` runs the same query on a device mesh through
+``distributed.engine_count_sharded`` — the binding's canonical column
+re-keying is what lets one Query serve both the local and the mesh path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core import engine, planner, recovery
+from repro.core.query import STAR_FACT_RATIO, Binding, Classification, Query
+from repro.perfmodel import HW, PLASTICINE
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryResult:
+    """Uniform result for every kind and strategy."""
+
+    count: np.int64                       # exact cardinality (int64)
+    overflowed: bool                      # False by construction
+    tuples_read: np.int64 | None          # traffic, summed over rounds
+    rounds: int                           # recovery rounds (1 = no skew)
+    kind: str                             # inferred: linear | cyclic | star
+    strategy: str                         # "3way" | "cascade"
+    cache_hit: bool                       # plan came from the session cache
+    plan_s: float                         # classification + sizing seconds
+    exec_s: float                         # execution seconds
+    plan: planner.EnginePlan | None = None
+    per_r: recovery.PerRResult | None = None   # per-R aggregates (linear)
+
+
+def _estimate_d(binding: Binding) -> int:
+    """Distinct-value estimate for the planner's traffic/time models: the
+    hub relation's R-side join column (host-side exact unique count — one
+    pass, amortized by the plan cache)."""
+    s = binding.rels["s"]
+    col = np.asarray(s.columns[binding.col_kwargs()["sb"]])
+    valid = np.asarray(s.valid)
+    return max(1, int(np.unique(col[valid]).size)) if valid.any() else 1
+
+
+class JoinSession:
+    """Declarative query executor with a plan cache.
+
+    >>> sess = JoinSession(m_budget=4096)
+    >>> res = sess.execute(Query(relations={...}, predicates=[...]))
+    >>> res.count, res.kind, res.strategy, res.cache_hit
+
+    Parameters mirror the engine: ``use_kernel`` dispatches the fused
+    Pallas kernels, ``max_rounds``/``growth`` shape skew recovery,
+    ``base_salt`` seeds every round's hash salt (plumbed all the way into
+    the recovery rounds — a plan-level salt is never silently dropped),
+    ``hw`` is the profile the 3-way vs cascade time decision runs on, and
+    ``star_fact_ratio`` tunes the star/linear hub disambiguation.
+    """
+
+    def __init__(self, *, m_budget: int | None = None, hw: HW = PLASTICINE,
+                 use_kernel: bool = False, max_rounds: int = 3,
+                 growth: float = 2.0, base_salt: int = 0,
+                 star_fact_ratio: float | None = None):
+        self.m_budget = m_budget
+        self.hw = hw
+        self.use_kernel = use_kernel
+        self.max_rounds = max_rounds
+        self.growth = growth
+        self.base_salt = base_salt
+        self.star_fact_ratio = (STAR_FACT_RATIO if star_fact_ratio is None
+                                else star_fact_ratio)
+        self._plan_cache: dict[Any, tuple[Classification,
+                                          planner.EnginePlan]] = {}
+        self._hits = 0
+        self._misses = 0
+
+    # -- cache -------------------------------------------------------------
+
+    @property
+    def cache_info(self) -> dict[str, int]:
+        return {"size": len(self._plan_cache), "hits": self._hits,
+                "misses": self._misses}
+
+    def clear_plan_cache(self) -> None:
+        self._plan_cache.clear()
+
+    def _cache_key(self, query: Query, cards: dict[str, int],
+                   m_budget: int | None, strategy: str | None,
+                   forced: Classification | None):
+        return (query.schema(), tuple(sorted(cards.items())), m_budget,
+                self.hw, self.use_kernel, strategy,
+                None if forced is None else (forced.kind, forced.roles,
+                                             forced.cols))
+
+    # -- planning ----------------------------------------------------------
+
+    def _plan(self, query: Query, cards: dict[str, int],
+              m_budget: int | None, strategy: str | None,
+              forced: Classification | None
+              ) -> tuple[Classification, planner.EnginePlan, bool]:
+        """Classify + size, through the plan cache.  A hit skips BOTH the
+        predicate-graph analysis and the shape/strategy sizing."""
+        key = self._cache_key(query, cards, m_budget, strategy, forced)
+        hit = self._plan_cache.get(key)
+        if hit is not None:
+            self._hits += 1
+            return hit[0], hit[1], True
+        self._misses += 1
+        cls_ = forced or query.classify(
+            cards, star_fact_ratio=self.star_fact_ratio)
+        binding = query.bind(cls_)
+        n_r, n_s, n_t = binding.cardinalities()
+        if strategy == "3way":
+            # forced 3-way (the legacy engine_count contract): size the
+            # shape plan, skip the time model
+            eng = engine.MultiwayJoinEngine(
+                cls_.kind, use_kernel=self.use_kernel,
+                max_rounds=self.max_rounds, growth=self.growth,
+                base_salt=self.base_salt)
+            if cls_.kind != "star" and m_budget is None:
+                raise ValueError(f"{cls_.kind} plans need m_budget")
+            shape = eng.default_plan(n_r, n_s, n_t, m_budget=m_budget)
+            ep = planner.forced_3way_plan(
+                cls_.kind, shape, m_budget=m_budget,
+                use_kernel=self.use_kernel, max_rounds=self.max_rounds,
+                growth=self.growth, base_salt=self.base_salt)
+        else:
+            ep = planner.plan_query(
+                cls_.kind, n_r, n_s, n_t, _estimate_d(binding),
+                m_budget=m_budget, hw=self.hw, use_kernel=self.use_kernel,
+                max_rounds=self.max_rounds, growth=self.growth,
+                base_salt=self.base_salt)
+        self._plan_cache[key] = (cls_, ep)
+        return cls_, ep, False
+
+    # -- execution ---------------------------------------------------------
+
+    def execute(self, query: Query, *, m_budget: int | None = None,
+                per_r: bool = False, key_col: str = "a",
+                plan=None, strategy: str | None = None,
+                classification: Classification | None = None) -> QueryResult:
+        """Classify, plan (or reuse a cached plan), execute, recover.
+
+        ``plan`` overrides sizing with an explicit shape plan (skipping the
+        planner and the cache); ``strategy="3way"`` skips the time model
+        and always runs the fused multiway engine; ``classification``
+        bypasses inference (the deprecation shims use it — new code should
+        let the graph speak).
+        """
+        if strategy not in (None, "3way"):
+            raise ValueError(f"unknown strategy {strategy!r}: pass None "
+                             "(planner decides) or '3way' (force the "
+                             "fused multiway engine)")
+        t0 = time.perf_counter()
+        m_budget = self.m_budget if m_budget is None else m_budget
+        cards = {name: int(rel.n) for name, rel in query.relations.items()}
+        if plan is not None:
+            cls_ = classification or query.classify(
+                cards, star_fact_ratio=self.star_fact_ratio)
+            ep = planner.forced_3way_plan(
+                cls_.kind, plan, m_budget=m_budget,
+                use_kernel=self.use_kernel, max_rounds=self.max_rounds,
+                growth=self.growth, base_salt=self.base_salt)
+            cache_hit = False
+        else:
+            cls_, ep, cache_hit = self._plan(query, cards, m_budget,
+                                             strategy, classification)
+        binding = query.bind(cls_)
+        plan_s = time.perf_counter() - t0
+
+        t1 = time.perf_counter()
+        r, s, t = binding.relations()
+        if per_r:
+            # the per-R aggregate pass owns every output tuple exactly
+            # once, so COUNT is its valid-slot sum — one engine execution,
+            # not two (legacy engine_per_r_counts parity)
+            if binding.kind != "linear":
+                raise ValueError(
+                    f"per-R aggregates need a linear-classified query; "
+                    f"this one classified as {binding.kind!r}")
+            per_r_res = recovery.run_per_r_rounds(
+                binding.kind_ops(), r, s, t, ep.shape_plan,
+                max_rounds=self.max_rounds, growth=self.growth,
+                use_kernel=self.use_kernel, base_salt=self.base_salt,
+                key_col=key_col)
+            count = int(per_r_res.counts[np.asarray(per_r_res.valid)].sum())
+            exec_s = time.perf_counter() - t1
+            return QueryResult(
+                count=np.int64(count),
+                overflowed=bool(per_r_res.overflowed),
+                tuples_read=per_r_res.tuples_read,
+                rounds=int(per_r_res.rounds), kind=binding.kind,
+                strategy="3way", cache_hit=cache_hit, plan_s=plan_s,
+                exec_s=exec_s, plan=ep, per_r=per_r_res)
+        res = ep.run(r, s, t, binding=binding)
+        exec_s = time.perf_counter() - t1
+        return QueryResult(
+            count=np.int64(int(res.count)),
+            overflowed=bool(res.overflowed),
+            tuples_read=np.int64(int(res.tuples_read)),
+            rounds=int(res.rounds), kind=binding.kind,
+            strategy=ep.strategy, cache_hit=cache_hit, plan_s=plan_s,
+            exec_s=exec_s, plan=ep, per_r=None)
+
+    # -- distributed -------------------------------------------------------
+
+    def execute_sharded(self, query: Query, mesh, row: str, col: str, *,
+                        max_rounds: int = 2,
+                        classification: Classification | None = None,
+                        **kw) -> QueryResult:
+        """The same declarative query on a device mesh: classify + bind,
+        re-key the relations to the canonical routing columns, and run the
+        cross-device recovery rounds of ``distributed.engine_count_sharded``
+        (``overflowed == False`` on the mesh too).  Relations should enter
+        sharded in arrival order (``distributed.shard_relation``)."""
+        from repro.core import distributed
+        t0 = time.perf_counter()
+        cards = {name: int(rel.n) for name, rel in query.relations.items()}
+        cls_ = classification or query.classify(
+            cards, star_fact_ratio=self.star_fact_ratio)
+        binding = query.bind(cls_)
+        r, s, t = binding.canonical()
+        plan_s = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        fn = distributed.engine_count_sharded(
+            mesh, row, col, binding.kind, max_rounds=max_rounds,
+            growth=self.growth, use_kernel=self.use_kernel, **kw)
+        res = fn(r, s, t)
+        exec_s = time.perf_counter() - t1
+        return QueryResult(
+            count=np.int64(int(res.count)),
+            overflowed=bool(res.overflowed), tuples_read=None,
+            rounds=int(res.rounds), kind=binding.kind, strategy="3way",
+            cache_hit=False, plan_s=plan_s, exec_s=exec_s)

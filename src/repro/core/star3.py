@@ -36,7 +36,7 @@ class Star3Plan(NamedTuple):
 class Star3Result(NamedTuple):
     count: jnp.ndarray
     overflowed: jnp.ndarray
-    tuples_read: jnp.ndarray
+    tuples_read: object      # int32 (scan) | engine.Traffic64 (fused)
 
 
 def default_plan(n_r: int, n_s: int, n_t: int, *, uh: int = 8, ug: int = 8,

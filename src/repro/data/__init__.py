@@ -1,6 +1,6 @@
 """Data substrate: synthetic token streams, relation workload generators,
 and the join-enriched pipeline (the paper's engine as a framework feature)."""
 
-from repro.data.synthetic import token_batches, TokenGenConfig  # noqa: F401
-from repro.data.relations import gen_relation, RelGenConfig  # noqa: F401
 from repro.data.pipeline import JoinEnrichedPipeline  # noqa: F401
+from repro.data.relations import RelGenConfig, gen_relation  # noqa: F401
+from repro.data.synthetic import TokenGenConfig, token_batches  # noqa: F401

@@ -25,7 +25,7 @@ from repro.models import zoo
 from repro.models.config import ModelConfig
 from repro.optim import AdamWConfig
 from repro.parallel.sharding import MeshContext, spec_for
-from repro.train import init_train_state, make_train_step, make_decode_step
+from repro.train import init_train_state, make_decode_step, make_train_step
 
 
 # --------------------------------------------------------------------------

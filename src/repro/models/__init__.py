@@ -1,4 +1,4 @@
 """LM substrate: model families for the assigned architectures."""
 
-from repro.models.config import ModelConfig  # noqa: F401
 from repro.models import zoo  # noqa: F401
+from repro.models.config import ModelConfig  # noqa: F401

@@ -1,4 +1,4 @@
-from repro.perfmodel.hw import HW, PLASTICINE, TPU_V5E, CPU_XEON  # noqa: F401
+from repro.perfmodel.hw import CPU_XEON, HW, PLASTICINE, TPU_V5E  # noqa: F401
 from repro.perfmodel.model import (  # noqa: F401
-    Breakdown, binary_cascade_time, linear3_time, star3_time,
-    cpu_cascade_time, star3_binary_time)
+    Breakdown, binary_cascade_time, cpu_cascade_time, linear3_time,
+    star3_binary_time, star3_time)

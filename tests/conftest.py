@@ -6,13 +6,13 @@ the ground truth every JAX/Pallas path is checked against.
 
 from __future__ import annotations
 
+import pathlib
+import sys
 from collections import Counter, defaultdict
 
 import numpy as np
 import pytest
 
-import pathlib
-import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 # Hermetic images may lack hypothesis (a dev dependency); fall back to the

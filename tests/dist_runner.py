@@ -5,22 +5,21 @@ Usage: python dist_runner.py  — exits nonzero on any mismatch.
 """
 
 import os
-import sys
 import pathlib
+import sys
 
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                            + " --xla_force_host_platform_device_count=8")
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-import numpy as np  # noqa: E402
 import jax  # noqa: E402
-
-from repro.core import distributed  # noqa: E402
-from repro.core.relation import Relation  # noqa: E402
+import numpy as np  # noqa: E402
 
 from conftest import (make_rel, oracle_cyclic3_count,  # noqa: E402
                       oracle_linear3_count)
+from repro.core import distributed  # noqa: E402
+from repro.core.relation import Relation  # noqa: E402
 
 
 def main():
@@ -94,6 +93,37 @@ def main():
         if bool(rese.overflowed) or int(rese.count) != want_k:
             failures.append(f"engine {kind}: got {int(rese.count)} "
                             f"want {want_k} ovf {bool(rese.overflowed)}")
+
+    # ---- declarative sharded path: JoinSession.execute_sharded ----------
+    # same queries through the front door: classification + canonical
+    # column re-keying must reproduce the kind-keyed engine results (the
+    # session re-keys the ALREADY-SHARDED relations — pure dict re-keying,
+    # no data movement)
+    from repro.core.query import Query
+    from repro.core.session import JoinSession
+    sess = JoinSession()
+    q_lin = Query({"r": place(r2), "s": place(s2), "t": place(t2)},
+                  [("r.b", "s.b"), ("s.c", "t.c")])
+    qres = sess.execute_sharded(q_lin, mesh, "row", "col",
+                                shuffle_slack=4.0, local_slack=5.0,
+                                local_u=4, local_g=2)
+    if qres.overflowed or int(qres.count) != want2 or qres.kind != "linear":
+        failures.append(f"session linear sharded: got {int(qres.count)} "
+                        f"want {want2} kind {qres.kind}")
+    q_cyc = Query({"r": place(r), "s": place(s), "t": place(t)},
+                  [("r.b", "s.b"), ("s.c", "t.c"), ("t.a", "r.a")])
+    qres2 = sess.execute_sharded(q_cyc, mesh, "row", "col",
+                                 shuffle_slack=4.0, local_slack=5.0)
+    if qres2.overflowed or int(qres2.count) != want or qres2.kind != "cyclic":
+        failures.append(f"session cyclic sharded: got {int(qres2.count)} "
+                        f"want {want} kind {qres2.kind}")
+    q_star = Query({"dim1": place(r3), "fact": place(s3), "dim2": place(t3)},
+                   [("dim1.b", "fact.b"), ("fact.c", "dim2.c")])
+    qres3 = sess.execute_sharded(q_star, mesh, "row", "col",
+                                 shuffle_slack=4.0, local_slack=5.0)
+    if qres3.overflowed or int(qres3.count) != want3 or qres3.kind != "star":
+        failures.append(f"session star sharded: got {int(qres3.count)} "
+                        f"want {want3} kind {qres3.kind}")
 
     # ---- cross-device skew recovery: adversarial heavy hitters ----------
     # A heavy-hitter key owns a large fraction of every relation: one

@@ -1,17 +1,16 @@
 """Per-architecture smoke tests: reduced same-family configs, one train step
 and one prefill+decode step on CPU; asserts shapes + finite outputs."""
 
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro import configs
 from repro.data.synthetic import TokenGenConfig, batch_at
 from repro.models import zoo
 from repro.optim import AdamWConfig
-from repro.train import init_train_state, make_train_step, make_decode_step
+from repro.train import init_train_state, make_decode_step, make_train_step
 
 B, S = 2, 32
 

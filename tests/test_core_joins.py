@@ -3,10 +3,10 @@
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (Relation, binary_join, cyclic3, driver, linear3,
-                        star3)
 from conftest import (make_rel, oracle_cyclic3_count, oracle_linear3_count,
                       oracle_linear3_per_r, oracle_pair_count)
+from repro.core import (Relation, binary_join, cyclic3, driver, linear3,
+                        star3)
 
 
 # --------------------------------------------------------------------------

@@ -1,9 +1,8 @@
 """Cost model (paper §4.2/§5.2 closed forms + Examples 3/4) and FM sketch."""
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
-
-import jax.numpy as jnp
 
 from repro.core import cost_model, sketches
 

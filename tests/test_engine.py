@@ -1,16 +1,15 @@
 """MultiwayJoinEngine: fused sweeps vs scan drivers vs kernels/ref.py,
 plus the skew-recovery guarantee (exact counts, no residual overflow)."""
 
+import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-import jax.numpy as jnp
-
+from conftest import (make_rel, oracle_cyclic3_count, oracle_linear3_count,
+                      oracle_linear3_per_r, skewed_keys)
 from repro.core import cyclic3, driver, engine, linear3, planner, star3
 from repro.core.relation import Relation
 from repro.kernels import ops as kops
-from conftest import (make_rel, oracle_cyclic3_count, oracle_linear3_count,
-                      oracle_linear3_per_r, skewed_keys)
 
 
 def _ref_linear_count(rb, sb, sc, tc) -> int:

@@ -2,11 +2,10 @@
 shape/dtype/causal/window/GQA sweeps for the forward, and VJP agreement
 against jax.grad of the dense reference for the backward."""
 
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro.kernels.flash_attention import (flash_attention_kernel,
                                            flash_fwd)

@@ -1,13 +1,12 @@
 """Hashing + partitioning invariants (property-based)."""
 
+import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-import jax.numpy as jnp
-
+from conftest import make_rel
 from repro.core import hashing, partition
 from repro.core.relation import Relation
-from conftest import make_rel
 
 
 def test_mix32_avalanche():

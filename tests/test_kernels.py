@@ -1,10 +1,9 @@
 """Pallas kernels vs pure-jnp oracles — interpret=True sweeps over
 shapes/dtypes.  Counts are integers, so checks are exact equality."""
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
-
-import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 
@@ -121,7 +120,6 @@ def test_kernel_end_to_end_linear3(rng):
 def test_fm_registers_ref_matches_direct_sketch(rng):
     """kernels.ref.fm_registers (implicit-join sketch) must equal the sketch
     of the explicitly materialized joined (a, d) pairs."""
-    from collections import defaultdict
     from repro.core import sketches
     b, cr, cs, ct, d, K = 2, 24, 30, 26, 12, 16
     ra = jnp.asarray(rng.integers(0, d, (b, cr)).astype(np.int32))

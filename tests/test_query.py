@@ -1,0 +1,352 @@
+"""Declarative query-graph API: classification, binding, JoinSession.
+
+Covers the front-door contract: the predicate graph (not a ``kind``
+string) decides linear/cyclic/star; schema errors and unsupported graphs
+raise; ``JoinSession.execute`` equals the legacy entry points for all
+three kinds (including under adversarial skew); the plan cache skips
+re-planning; and the plan-level ``base_salt`` reaches the recovery rounds.
+"""
+
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_rel, skewed_keys
+from repro.core import driver, engine, linear3, planner, recovery
+from repro.core.query import (Query, QueryGraphError, QuerySchemaError,
+                              _legacy_query)
+from repro.core.relation import Relation
+from repro.core.session import JoinSession
+
+
+def _query3(r, s, t, preds):
+    return Query(relations={"r": r, "s": s, "t": t}, predicates=preds)
+
+
+def _linear_preds():
+    return [("r.b", "s.b"), ("s.c", "t.c")]
+
+
+def _cyclic_preds():
+    return [("r.b", "s.b"), ("s.c", "t.c"), ("t.a", "r.a")]
+
+
+# --------------------------------------------------------------------------
+# classification: graph shapes and edge cases
+# --------------------------------------------------------------------------
+
+def test_classify_path_is_linear(rng):
+    r, _ = make_rel(rng, 100, ("a", "b"), 20)
+    s, _ = make_rel(rng, 100, ("b", "c"), 20)
+    t, _ = make_rel(rng, 100, ("c", "d"), 20)
+    cls_ = _query3(r, s, t, _linear_preds()).classify()
+    assert cls_.kind == "linear" and cls_.shape == "path"
+    assert cls_.role_map == {"r": "r", "s": "s", "t": "t"}
+    assert cls_.col_map == {"rb": "b", "sb": "b", "sc": "c", "tc": "c"}
+
+
+def test_classify_cycle_is_cyclic(rng):
+    r, _ = make_rel(rng, 100, ("a", "b"), 20)
+    s, _ = make_rel(rng, 100, ("b", "c"), 20)
+    t, _ = make_rel(rng, 100, ("c", "a"), 20)
+    cls_ = _query3(r, s, t, _cyclic_preds()).classify()
+    assert cls_.kind == "cyclic" and cls_.shape == "cycle"
+    assert cls_.col_map == {"ra": "a", "rb": "b", "sb": "b", "sc": "c",
+                            "tc": "c", "ta": "a"}
+
+
+def test_classify_hub_is_star_by_cardinality(rng):
+    """A path whose centre dwarfs both endpoints is the star (fact +
+    dimensions) schema; the SAME graph with balanced sizes is linear —
+    the documented ambiguity tie-break."""
+    dim1, _ = make_rel(rng, 80, ("a", "b"), 20)
+    dim2, _ = make_rel(rng, 90, ("c", "d"), 20)
+    fact, _ = make_rel(rng, 2000, ("b", "c"), 20)
+    q = Query({"d1": dim1, "f": fact, "d2": dim2},
+              [("d1.b", "f.b"), ("f.c", "d2.c")])
+    assert q.classify().kind == "star"
+    # explicit cardinalities override the data: balanced -> linear
+    assert q.classify({"d1": 100, "f": 100, "d2": 100}).kind == "linear"
+    # right at the ratio boundary the tie resolves to star (>=)
+    assert q.classify({"d1": 25, "f": 100, "d2": 25}).kind == "star"
+    assert q.classify({"d1": 26, "f": 100, "d2": 25}).kind == "linear"
+
+
+def test_classify_self_join_three_aliases(rng):
+    """Self-joins register one Relation under several names; roles follow
+    declaration order and columns bind per-alias."""
+    f, _ = make_rel(rng, 150, ("src", "dst"), 25)
+    q = Query({"f1": f, "f2": f, "f3": f},
+              [("f1.dst", "f2.src"), ("f2.dst", "f3.src")])
+    cls_ = q.classify()
+    assert cls_.kind == "linear"
+    assert cls_.role_map == {"r": "f1", "s": "f2", "t": "f3"}
+    assert cls_.col_map == {"rb": "dst", "sb": "src", "sc": "dst",
+                            "tc": "src"}
+    b = q.bind(cls_)
+    assert b.rels["r"] is f and b.rels["s"] is f
+
+
+def test_classify_disconnected_raises(rng):
+    r, _ = make_rel(rng, 50, ("a", "b"), 10)
+    s, _ = make_rel(rng, 50, ("b", "c"), 10)
+    t, _ = make_rel(rng, 50, ("c", "d"), 10)
+    with pytest.raises(QueryGraphError, match="disconnected"):
+        _query3(r, s, t, [("r.b", "s.b")]).classify()
+
+
+def test_classify_rejects_bad_graphs(rng):
+    r, _ = make_rel(rng, 50, ("a", "b"), 10)
+    s, _ = make_rel(rng, 50, ("b", "c"), 10)
+    t, _ = make_rel(rng, 50, ("c", "d"), 10)
+    # predicate joining a relation to itself (use aliases instead)
+    with pytest.raises(QueryGraphError, match="self-join"):
+        _query3(r, s, t,
+                [("r.a", "r.b"), ("r.b", "s.b"), ("s.c", "t.c")]).classify()
+    # two predicates between the same pair (conjunctive multi-column)
+    with pytest.raises(QueryGraphError, match="multi-column"):
+        _query3(r, s, t, [("r.a", "s.b"), ("r.b", "s.c"),
+                          ("s.c", "t.c")]).classify()
+    # wrong arity
+    with pytest.raises(QueryGraphError, match="3-relation"):
+        Query({"r": r, "s": s}, [("r.b", "s.b")]).classify()
+
+
+def test_schema_validation_raises(rng):
+    r, _ = make_rel(rng, 50, ("a", "b"), 10)
+    s, _ = make_rel(rng, 50, ("b", "c"), 10)
+    t, _ = make_rel(rng, 50, ("c", "d"), 10)
+    with pytest.raises(QuerySchemaError, match="no column"):
+        _query3(r, s, t, [("r.zz", "s.b"), ("s.c", "t.c")])
+    with pytest.raises(QuerySchemaError, match="unknown relation"):
+        _query3(r, s, t, [("x.b", "s.b"), ("s.c", "t.c")])
+    with pytest.raises(QuerySchemaError, match="rel.col"):
+        _query3(r, s, t, [("rb", "s.b"), ("s.c", "t.c")])
+
+
+# --------------------------------------------------------------------------
+# parity: JoinSession.execute == the legacy entry points, all three kinds
+# --------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(4, 60),
+       kind=st.sampled_from(["linear", "cyclic", "star"]))
+def test_session_matches_legacy_entry_points(seed, d, kind):
+    """Hypothesis parity: for every kind, the declarative path returns the
+    same exact count as legacy ``engine_count`` AND ``plan_query().run()``
+    (no kind string crosses the new API)."""
+    rng = np.random.default_rng(seed)
+    if kind == "star":
+        r, _ = make_rel(rng, 60, ("a", "b"), d)
+        s, _ = make_rel(rng, 900, ("b", "c"), d)
+        t, _ = make_rel(rng, 70, ("c", "d"), d)
+        preds = _linear_preds()
+    elif kind == "cyclic":
+        r, _ = make_rel(rng, 120, ("a", "b"), d)
+        s, _ = make_rel(rng, 130, ("b", "c"), d)
+        t, _ = make_rel(rng, 110, ("c", "a"), d)
+        preds = _cyclic_preds()
+    else:
+        r, _ = make_rel(rng, 120, ("a", "b"), d)
+        s, _ = make_rel(rng, 130, ("b", "c"), d)
+        t, _ = make_rel(rng, 110, ("c", "d"), d)
+        preds = _linear_preds()
+    q = _query3(r, s, t, preds)
+    cls_ = q.classify()
+    assert cls_.kind == kind
+    res = JoinSession(m_budget=64).execute(q)
+    assert not res.overflowed
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = driver.engine_count(kind, r, s, t, m_budget=64)
+    assert int(res.count) == int(legacy.count)
+    n_r, n_s, n_t = int(r.n), int(s.n), int(t.n)
+    ep = planner.plan_query(kind, n_r, n_s, n_t, d, m_budget=64)
+    assert int(ep.run(r, s, t).count) == int(res.count)
+
+
+def test_session_skew_recovery_exact(rng):
+    """Adversarial heavy-hitter keys through the declarative path: the
+    session must recover exactly (overflowed == False) and agree with the
+    single-bucket kernel reference."""
+    from repro.kernels import ops as kops
+    rb = skewed_keys(rng, 200, 30, 0.5)
+    sb = skewed_keys(rng, 220, 30, 0.5)
+    sc = skewed_keys(rng, 220, 30, 0.5, 2)
+    tc = skewed_keys(rng, 210, 30, 0.5, 2)
+    r = Relation.from_arrays(a=rng.integers(0, 99, 200).astype(np.int32),
+                             b=rb)
+    s = Relation.from_arrays(b=sb, c=sc)
+    t = Relation.from_arrays(c=tc,
+                             d=rng.integers(0, 99, 210).astype(np.int32))
+    want = int(kops.bucket_count3_linear(
+        jnp.asarray(rb)[None, :], jnp.ones((1, len(rb)), bool),
+        jnp.asarray(sb)[None, :], jnp.asarray(sc)[None, :],
+        jnp.ones((1, len(sb)), bool),
+        jnp.asarray(tc)[None, :], jnp.ones((1, len(tc)), bool))[0])
+    plan = linear3.default_plan(200, 220, 210, m_budget=64, u=4, slack=1.2)
+    res = JoinSession().execute(_query3(r, s, t, _linear_preds()),
+                                plan=plan)
+    assert int(res.count) == want
+    assert not res.overflowed
+    assert res.rounds > 1          # the skew actually exercised recovery
+
+
+def test_session_per_r_matches_legacy(rng):
+    r, _ = make_rel(rng, 120, ("a", "b"), 25)
+    s, _ = make_rel(rng, 140, ("b", "c"), 25)
+    t, _ = make_rel(rng, 130, ("c", "d"), 25)
+    plan = linear3.default_plan(120, 140, 130, m_budget=48, u=4)
+    res = JoinSession().execute(_query3(r, s, t, _linear_preds()),
+                                plan=plan, per_r=True)
+    # per_r executes the engine ONCE: COUNT is the valid per-R sum, and
+    # the per-R rounds report their own int64 traffic
+    assert int(res.count) == int(
+        res.per_r.counts[np.asarray(res.per_r.valid)].sum())
+    assert res.per_r.tuples_read > 0
+    assert np.asarray(res.tuples_read).dtype == np.int64
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = driver.engine_per_r_counts(r, s, t, plan)
+    np.testing.assert_array_equal(np.asarray(res.per_r.counts),
+                                  np.asarray(legacy.counts))
+    np.testing.assert_array_equal(np.asarray(res.per_r.keys),
+                                  np.asarray(legacy.keys))
+    with pytest.raises(ValueError, match="linear"):
+        t2, _ = make_rel(rng, 130, ("c", "a"), 25)
+        JoinSession(m_budget=64).execute(
+            _query3(r, s, t2, _cyclic_preds()), per_r=True)
+
+
+# --------------------------------------------------------------------------
+# plan cache: repeated queries skip classification and sizing
+# --------------------------------------------------------------------------
+
+def test_plan_cache_hits_and_invalidates(rng, monkeypatch):
+    r, _ = make_rel(rng, 150, ("a", "b"), 30)
+    s, _ = make_rel(rng, 160, ("b", "c"), 30)
+    t, _ = make_rel(rng, 140, ("c", "d"), 30)
+    sess = JoinSession(m_budget=64)
+    q = _query3(r, s, t, _linear_preds())
+    cold = sess.execute(q)
+    assert not cold.cache_hit and sess.cache_info["misses"] == 1
+
+    # a warm execute must not re-classify or re-size
+    calls = {"classify": 0, "plan_query": 0}
+    orig_classify = Query.classify
+    orig_plan_query = planner.plan_query
+
+    def probe_classify(self, *a, **kw):
+        calls["classify"] += 1
+        return orig_classify(self, *a, **kw)
+
+    def probe_plan_query(*a, **kw):
+        calls["plan_query"] += 1
+        return orig_plan_query(*a, **kw)
+
+    monkeypatch.setattr(Query, "classify", probe_classify)
+    monkeypatch.setattr(planner, "plan_query", probe_plan_query)
+    warm = sess.execute(q)
+    assert warm.cache_hit and calls == {"classify": 0, "plan_query": 0}
+    assert int(warm.count) == int(cold.count)
+
+    # changed cardinalities miss the cache (plans are size-dependent)
+    r2, _ = make_rel(rng, 220, ("a", "b"), 30)
+    again = sess.execute(_query3(r2, s, t, _linear_preds()))
+    assert not again.cache_hit and calls["plan_query"] == 1
+
+
+# --------------------------------------------------------------------------
+# satellite regressions: base_salt plumbing + int64 fused traffic
+# --------------------------------------------------------------------------
+
+def test_engine_plan_build_keeps_base_salt(rng):
+    """Regression: EnginePlan.build() used to drop base_salt, silently
+    de-randomizing every recovery round on the planner path."""
+    ep = planner.plan_query("linear", 100, 100, 100, 10, m_budget=64,
+                            base_salt=7)
+    assert ep.base_salt == 7
+    assert ep.build().base_salt == 7
+    # the session plumbs its base_salt into the recovery rounds
+    seen = {}
+    orig = recovery.run_count_rounds
+
+    def probe(ops, r, s, t, plan, **kw):
+        seen["base_salt"] = kw.get("base_salt")
+        return orig(ops, r, s, t, plan, **kw)
+
+    r, _ = make_rel(rng, 100, ("a", "b"), 20)
+    s, _ = make_rel(rng, 100, ("b", "c"), 20)
+    t, _ = make_rel(rng, 100, ("c", "d"), 20)
+    import repro.core.recovery as rec_mod
+    try:
+        rec_mod.run_count_rounds = probe
+        JoinSession(m_budget=64, base_salt=11).execute(
+            _query3(r, s, t, _linear_preds()), strategy="3way")
+    finally:
+        rec_mod.run_count_rounds = orig
+    assert seen["base_salt"] == 11
+    # salted and unsalted sessions agree on the exact count
+    q = _query3(r, s, t, _linear_preds())
+    a = JoinSession(m_budget=64, base_salt=0).execute(q)
+    b = JoinSession(m_budget=64, base_salt=123).execute(q)
+    assert int(a.count) == int(b.count)
+
+
+def test_fused_traffic_is_int64_exact(rng):
+    """The fused tuples counters must not wrap at 2^31: h_parts * t.n is
+    computed limb-wise (Traffic64) and must agree with the recovery path's
+    host-side int64 totals."""
+    # unit: the limb arithmetic is exact where int32 wraps
+    big = engine.traffic64([(1024, jnp.int32(2**22)), (1, jnp.int32(5))])
+    assert int(big) == 1024 * 2**22 + 5        # 2^32 + 5: wraps in int32
+    assert int(engine.traffic64([(2**20, jnp.int32(2**30 + 12345))])
+               ) == 2**20 * (2**30 + 12345)
+    # end-to-end: fused one-shot traffic == recovery EngineResult traffic
+    r, _ = make_rel(rng, 150, ("a", "b"), 40)
+    s, _ = make_rel(rng, 160, ("b", "c"), 40)
+    t, _ = make_rel(rng, 140, ("c", "d"), 40)
+    plan = linear3.default_plan(150, 160, 140, m_budget=64, u=4, slack=4.0)
+    fused = engine.linear3_count_fused(r, s, t, plan)
+    assert not bool(fused.overflowed)
+    res = engine.MultiwayJoinEngine("linear").count(r, s, t, plan)
+    assert res.rounds == 1
+    assert int(fused.tuples_read) == int(res.tuples_read)
+    assert np.asarray(res.tuples_read).dtype == np.int64
+
+
+def test_fused_traffic_consistent_all_kinds(rng):
+    """cyclic/star fused traffic matches the recovery formulas too."""
+    from repro.core import cyclic3, star3
+    r, _ = make_rel(rng, 140, ("a", "b"), 30)
+    s, _ = make_rel(rng, 150, ("b", "c"), 30)
+    tc_, _ = make_rel(rng, 130, ("c", "a"), 30)
+    cp = cyclic3.default_plan(140, 150, 130, m_budget=64, uh=2, ug=2,
+                              slack=4.0)
+    fused = engine.cyclic3_count_fused(r, s, tc_, cp)
+    want = (int(r.n) + cp.h_parts * int(s.n) + cp.g_parts * int(tc_.n))
+    assert int(fused.tuples_read) == want
+    td, _ = make_rel(rng, 130, ("c", "d"), 30)
+    sp = star3.default_plan(140, 150, 130, uh=4, ug=4, slack=4.0)
+    fused_star = engine.star3_count_fused(r, s, td, sp)
+    assert int(fused_star.tuples_read) == (int(r.n) + int(s.n) + int(td.n))
+
+
+# --------------------------------------------------------------------------
+# deprecation shims construct the equivalent Query
+# --------------------------------------------------------------------------
+
+def test_legacy_shims_warn_and_match(rng):
+    r, _ = make_rel(rng, 100, ("a", "b"), 20)
+    s, _ = make_rel(rng, 110, ("b", "c"), 20)
+    t, _ = make_rel(rng, 105, ("c", "d"), 20)
+    with pytest.warns(DeprecationWarning, match="JoinSession"):
+        res = driver.engine_count("linear", r, s, t, m_budget=64)
+    assert not bool(res.overflowed)
+    q, cls_ = _legacy_query("linear", r, s, t, {})
+    assert cls_.kind == "linear"
+    assert int(JoinSession(m_budget=64).execute(
+        q, classification=cls_, strategy="3way").count) == int(res.count)

@@ -10,15 +10,14 @@ The sharded path is covered by the same adversarial-skew construction in
 tests/dist_runner.py (subprocess, 8 fake devices).
 """
 
+import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-import jax.numpy as jnp
-
-from repro.core import cyclic3, driver, linear3, star3
-from repro.kernels import ops as kops
-from repro.core.relation import Relation
 from conftest import skewed_keys as _skew_mix
+from repro.core import cyclic3, driver, linear3, star3
+from repro.core.relation import Relation
+from repro.kernels import ops as kops
 
 
 def _ref_linear(rb, sb, sc, tc) -> int:

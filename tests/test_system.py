@@ -2,11 +2,10 @@
 simulated node failure, straggler detection), elastic re-mesh restore,
 gradient-compression error feedback, and the train/serve launchers."""
 
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
+import numpy as np
+import pytest
 
 from repro import configs
 from repro.checkpoint import CheckpointManager, latest_step
