@@ -1,9 +1,14 @@
 """Core multiway hash-join engine (the paper's contribution).
 
 Public API:
-  Query / JoinSession      — the declarative front door: relations + join
-                             predicates in, classified + planned + executed
-                             + skew-recovered QueryResult out (plan-cached)
+  Query / JoinSession      — the declarative front door: any connected
+                             acyclic graph of N >= 2 relations + join
+                             predicates in (cyclic at N = 3), decomposed +
+                             planned + executed + skew-recovered
+                             QueryResult out (plan-cached)
+  QueryPlan / PlanStep     — the multi-step plan IR: a DAG of fused 3-way
+                             and binary join steps (planner.plan_query
+                             decomposes, plan_ir.execute_plan walks)
   Relation                 — fixed-capacity columnar relation
   MultiwayJoinEngine       — fused partition-sweep engine + skew recovery
   linear3_count_fused / cyclic3_count_fused / star3_count_fused
@@ -27,6 +32,7 @@ from repro.core.engine import (  # noqa: F401
 from repro.core.linear3 import (  # noqa: F401
     Linear3Plan, linear3_count, linear3_fm_distinct, linear3_per_r_counts)
 from repro.core.linear3 import default_plan as linear3_default_plan  # noqa: F401
+from repro.core.plan_ir import PlanStep, QueryPlan, StepStats  # noqa: F401
 from repro.core.query import (  # noqa: F401
     Binding, Classification, Query, QueryError, QueryGraphError,
     QuerySchemaError)

@@ -22,9 +22,24 @@ from __future__ import annotations
 from typing import NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import partition
 from repro.core.relation import Relation
+
+
+def exact_join_count(build: Relation, build_key: str,
+                     probe: Relation, probe_key: str) -> int:
+    """Exact ``|build ⋈ probe|`` via host-side key histograms (int64 —
+    immune to the int32 device counters).  The plan IR uses this both to
+    size materialized intermediates exactly (a materialize step cannot
+    overflow) and as the root aggregate of an all-binary cascade."""
+    bv = np.asarray(build.col(build_key))[np.asarray(build.valid)]
+    pv = np.asarray(probe.col(probe_key))[np.asarray(probe.valid)]
+    bu, bc = np.unique(bv, return_counts=True)
+    pu, pc = np.unique(pv, return_counts=True)
+    _, bi, pi = np.intersect1d(bu, pu, return_indices=True)
+    return int((bc[bi].astype(np.int64) * pc[pi].astype(np.int64)).sum())
 
 
 # --------------------------------------------------------------------------

@@ -38,10 +38,16 @@ class OverflowError_(RuntimeError):
 
 
 def _deprecated(old: str) -> None:
+    # stacklevel=3 attributes the warning to the CALLER of the shim
+    # (1 = this warn call, 2 = the shim body, 3 = user code) — pinned by
+    # test_plan_ir.test_deprecation_warning_points_at_caller, so the
+    # warning's file:line leads users to the site they must migrate
     warnings.warn(
         f"driver.{old} is deprecated: build a core.query.Query and execute "
         "it through core.session.JoinSession (the kind is inferred from "
-        "the predicate graph)", DeprecationWarning, stacklevel=3)
+        "the predicate graph; queries over more than 3 relations are "
+        "supported there via the multi-step plan IR)",
+        DeprecationWarning, stacklevel=3)
 
 
 def engine_count(kind: str, r, s, t, plan=None, *, m_budget: int | None = None,

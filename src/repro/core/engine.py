@@ -26,6 +26,13 @@ docstring for the full contract and exactness argument.
 
 The ``*_count_fused`` functions are single-pass and fully traceable (jit /
 shard_map safe); ``MultiwayJoinEngine`` adds the host-side recovery loop.
+
+The engine executes exactly one 3-relation step.  N-way queries reach it
+through ``core.plan_ir``: the planner decomposes the predicate tree into
+binary materialize steps feeding a fused 3-way root, and each ``fused3``
+plan step runs through ``MultiwayJoinEngine.count`` — so the recovery
+contract (one hashing pass per relation per round, exact partials kept,
+``overflowed == False``) holds per step of a multi-step plan.
 """
 
 from __future__ import annotations

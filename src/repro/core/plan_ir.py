@@ -1,0 +1,252 @@
+"""Multi-step query-plan IR: cascades of fused 3-way and binary joins.
+
+The paper's central result is a *choice* — one fused 3-way join versus a
+cascade of binary hash joins — and this module is the representation that
+makes the choice first-class for any connected acyclic equality-join graph
+over N >= 2 named relations (cyclic graphs stay supported at N = 3, the
+triangle query):
+
+  * :class:`PlanStep` — one physical step.  ``op == "binary"`` is a
+    sorted-path hash join (materialized into a fixed-capacity intermediate
+    ``Relation``, or host-aggregated when it is the root); ``op ==
+    "fused3"`` is the fused 3-way engine, recovery-wrapped: skew rounds +
+    the exact-histogram final round make ``overflowed == False`` a
+    per-step postcondition.
+  * :class:`QueryPlan` — a DAG of steps in topological order.  Steps name
+    their inputs (base relations by query name, intermediates as
+    ``%i<k>``); intermediate schemas (``project``) and plan-time
+    cardinality estimates (``est_rows``/``est_out``) flow between steps;
+    the root step writes :data:`COUNT`.
+  * :func:`execute_plan` — the ONE executor.  It walks the DAG,
+    materializes intermediates exactly (capacities sized from exact
+    host-side key histograms, so a materialize step *cannot* overflow),
+    threads ``base_salt``/``max_rounds``/``growth`` through every fused
+    step, and aggregates count / tuples_read / recovery rounds across
+    steps into a single result.
+
+``planner.plan_query`` is the decomposer that produces these plans;
+``session.JoinSession.execute`` walks them.  The legacy
+``planner.EnginePlan.run`` cascade branch now routes through this
+executor too — there is no second cascade implementation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Mapping, NamedTuple
+
+import numpy as np
+
+from repro.core import binary_join, engine
+from repro.core.query import Predicate
+from repro.core.relation import Relation
+
+# The root step's output name: the aggregated COUNT of the whole query.
+COUNT = "%count"
+
+
+def _align8(n: int) -> int:
+    return max(8, ((int(n) + 7) // 8) * 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanStep:
+    """One physical step of a :class:`QueryPlan`.
+
+    ``inputs`` are environment names: base relations keep their query
+    names, intermediates are ``%i<k>``.  ``preds`` reference columns in
+    the *post-projection* key space of each input (base relations keep
+    their original column names; intermediate columns are
+    ``"<relation>.<column>"``, stamped by the materialize step that
+    produced them).
+    """
+
+    op: str                              # "binary" | "fused3"
+    out: str                             # "%i<k>" or COUNT
+    inputs: tuple[str, ...]              # 2 (binary) or 3 (fused3) names
+    preds: tuple[Predicate, ...]         # equality predicates among inputs
+    aggregate: bool                      # root COUNT step vs materialize
+    # binary materialize: per-input projection ((src col, dst col), ...) —
+    # only the columns later steps read survive into the intermediate
+    project: tuple = ()
+    # fused3 bookkeeping: the classified kind, engine role -> input name,
+    # engine col kwarg -> column key, and (optionally) a pre-sized shape
+    # plan.  ``shape_plan is None`` means "size at execute time from the
+    # live cardinalities" — the rule for steps that read intermediates.
+    kind: str | None = None
+    roles: tuple[tuple[str, str], ...] = ()
+    cols: tuple[tuple[str, str], ...] = ()
+    shape_plan: object | None = None
+    recovery: bool = True                # fused3 steps run skew recovery
+    choice: object | None = None         # planner.TimedChoice, if one ran
+    est_rows: tuple[int, ...] = ()       # plan-time input-card estimates
+    est_out: int | None = None           # plan-time output-rows estimate
+
+    def describe(self) -> str:
+        if self.op == "fused3":
+            ins = ", ".join(self.inputs)
+            return (f"{self.out} <- fused3[{self.kind}"
+                    f"{', recovery' if self.recovery else ''}]({ins})")
+        (p,) = self.preds
+        verb = "count" if self.aggregate else "join"
+        est = "" if self.est_out is None else f"  [~{self.est_out} rows]"
+        return (f"{self.out} <- binary-{verb}({self.inputs[0]} ⋈ "
+                f"{self.inputs[1]} on {p.left[1]} = {p.right[1]}){est}")
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """A DAG of :class:`PlanStep` in topological order, plus the engine
+    configuration every step shares.  This object is what the session's
+    plan cache stores: it references relations by NAME only, so a cached
+    plan re-executes against refreshed data of similar size."""
+
+    steps: tuple[PlanStep, ...]
+    n_relations: int
+    kind: str                # classified kind of the (root) frontier
+    strategy: str            # "3way" | "cascade" | "hybrid"
+    m_budget: int | None = None
+    use_kernel: bool = False
+    max_rounds: int = 3
+    growth: float = 2.0
+    base_salt: int = 0
+
+    @property
+    def fused3_steps(self) -> tuple[PlanStep, ...]:
+        return tuple(s for s in self.steps if s.op == "fused3")
+
+    @property
+    def root(self) -> PlanStep:
+        return self.steps[-1]
+
+    def describe(self) -> str:
+        head = (f"QueryPlan[{self.n_relations} relations, kind={self.kind}, "
+                f"strategy={self.strategy}]")
+        return "\n".join([head] + ["  " + s.describe() for s in self.steps])
+
+
+class StepStats(NamedTuple):
+    """Per-step execution record (aggregated onto the QueryResult)."""
+
+    op: str
+    out: str
+    rows: int                # materialized rows, or the aggregated count
+    rounds: int              # recovery rounds (0 for binary steps)
+    tuples_read: int
+    exec_s: float
+
+
+class PlanExecResult(NamedTuple):
+    count: int
+    overflowed: bool         # False by construction (see execute_plan)
+    tuples_read: int         # summed over steps (intermediates counted as
+    rounds: int              # written once + read once, like §6.3)
+    step_stats: tuple
+
+
+def _step_keys(step: PlanStep) -> tuple[str, str]:
+    """The (left-input, right-input) join column keys of a binary step."""
+    (pred,) = step.preds
+    if pred.left[0] == step.inputs[0]:
+        return pred.left[1], pred.right[1]
+    return pred.right[1], pred.left[1]
+
+
+def _project(rel: Relation, mapping) -> Relation:
+    if not mapping:
+        return rel
+    return Relation({dst: rel.columns[src] for src, dst in mapping},
+                    rel.valid)
+
+
+def _materialize(step: PlanStep, env) -> tuple[Relation, int, int]:
+    """Execute a binary materialize step: exact-size the intermediate from
+    host-side key histograms (it cannot overflow), then expand."""
+    a, b = env[step.inputs[0]], env[step.inputs[1]]
+    proj_a, proj_b = step.project if step.project else ((), ())
+    a2, b2 = _project(a, proj_a), _project(b, proj_b)
+    ka, kb = _step_keys(step)
+    total = binary_join.exact_join_count(a2, ka, b2, kb)
+    if total >= 2**31:
+        raise ValueError(
+            f"intermediate {step.out} has {total} rows — too large to "
+            "materialize; re-plan with strategy='3way' (the fused 3-way "
+            "engine never materializes the join output)")
+    jres = binary_join.join_materialize(a2, ka, b2, kb,
+                                        _align8(max(64, total + 8)))
+    assert not bool(jres.overflowed)      # exact-sized above
+    tuples = int(a.n) + int(b.n) + total  # read both inputs, write I once
+    return jres.rel, total, tuples
+
+
+def _run_fused3(step: PlanStep, plan: QueryPlan, env) -> engine.EngineResult:
+    """Execute a fused 3-way step through the recovery-wrapped engine.
+    ``shape_plan is None`` sizes the partition shape here, from the LIVE
+    input cardinalities (the inputs may be just-materialized
+    intermediates whose sizes no plan-time estimate pinned down)."""
+    rels = {role: env[name] for role, name in step.roles}
+    r, s, t = rels["r"], rels["s"], rels["t"]
+    eng = engine.MultiwayJoinEngine(
+        step.kind, use_kernel=plan.use_kernel, max_rounds=plan.max_rounds,
+        growth=plan.growth, base_salt=plan.base_salt)
+    shape = step.shape_plan
+    if shape is None:
+        shape = eng.default_plan(int(r.n), int(s.n), int(t.n),
+                                 m_budget=plan.m_budget)
+    return eng.count(r, s, t, shape, **dict(step.cols))
+
+
+def execute_plan(plan: QueryPlan,
+                 relations: Mapping[str, Relation]) -> PlanExecResult:
+    """Walk the DAG: materialize intermediates, aggregate at the root.
+
+    ``overflowed == False`` is a postcondition of the whole walk: binary
+    materialize steps are exact-sized host-side, binary aggregates are
+    exact int64 host histograms, and fused steps inherit the recovery
+    engine's exact-histogram final round.
+    """
+    env: dict[str, Relation] = dict(relations)
+    total_tuples = 0
+    rounds = 0
+    count = 0
+    stats: list[StepStats] = []
+    for step in plan.steps:
+        t0 = time.perf_counter()
+        if step.op == "binary" and not step.aggregate:
+            rel, rows, tuples = _materialize(step, env)
+            env[step.out] = rel
+            total_tuples += tuples
+            stats.append(StepStats("binary", step.out, rows, 0, tuples,
+                                   time.perf_counter() - t0))
+        elif step.op == "binary":
+            a, b = env[step.inputs[0]], env[step.inputs[1]]
+            ka, kb = _step_keys(step)
+            count = binary_join.exact_join_count(a, ka, b, kb)
+            tuples = int(a.n) + int(b.n)
+            total_tuples += tuples
+            stats.append(StepStats("binary", step.out, count, 0, tuples,
+                                   time.perf_counter() - t0))
+        elif step.op == "fused3":
+            if not step.aggregate:
+                raise ValueError(
+                    "fused3 steps aggregate (the engine never materializes "
+                    f"its output); step {step.out!r} tries to materialize")
+            res = _run_fused3(step, plan, env)
+            count = int(res.count)
+            total_tuples += int(res.tuples_read)
+            rounds += int(res.rounds)
+            stats.append(StepStats("fused3", step.out, count,
+                                   int(res.rounds), int(res.tuples_read),
+                                   time.perf_counter() - t0))
+        else:
+            raise ValueError(f"unknown plan-step op {step.op!r}")
+    return PlanExecResult(int(count), False, int(total_tuples),
+                          max(rounds, 1), tuple(stats))
+
+
+def result_as_engine(res: PlanExecResult) -> engine.EngineResult:
+    """Repackage a plan walk as the legacy EngineResult contract."""
+    import jax.numpy as jnp
+    return engine.EngineResult(np.int64(res.count), jnp.asarray(False),
+                               np.int64(res.tuples_read), res.rounds)

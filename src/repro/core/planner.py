@@ -1,4 +1,4 @@
-"""Join planner: 3-way vs cascaded-binary decision (§6 logic).
+"""Join planner: N-way query decomposition + the 3-way vs cascade call.
 
 Three decision layers:
   * traffic  — the paper's closed-form tuple-traffic comparison
@@ -6,20 +6,37 @@ Three decision layers:
   * time     — the Appendix-A cycle model on a concrete hardware profile
     (captures the compute/DRAM/SSD terms traffic alone misses, e.g. the
     v5e case where fast host DMA shrinks the 3-way win to 2.1×),
-  * execution — ``plan_query`` returns an **executable** ``EnginePlan``:
-    the timed choice plus a sized shape plan bound to the fused
-    ``MultiwayJoinEngine``, so ``plan.run(r, s, t)`` goes straight from
-    planning to an exact (skew-recovered) answer.
+  * execution — :func:`plan_query` is the **decomposer**: it takes a
+    declarative ``core.query.Query`` over any connected acyclic graph of
+    N ≥ 2 relations (cyclic allowed at N = 3, the triangle query) and
+    returns an executable ``core.plan_ir.QueryPlan``.  The predicate tree
+    is greedily contracted along its smallest estimated joins
+    (Swami–Schiefer ``|A ⋈ B| ≈ |A||B| / max(d_A, d_B)``) into binary
+    materialize steps until three relations remain; the 3-relation
+    frontier is classified (linear / star by hub-cardinality ratio) and
+    the Appendix-A time model picks the root: one fused, recovery-wrapped
+    3-way step or two more binary steps.  3-relation queries therefore
+    keep their single-step fused plans, and every cascade — including the
+    legacy ``EnginePlan.run`` cascade — executes through the one plan-IR
+    walker.
+
+:func:`plan_step` is the former ``plan_query``: the 3-relation step
+planner that sizes one shape plan and times one 3-way/cascade choice.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-from repro.core import binary_join, cyclic3, engine, linear3, star3
+import numpy as np
+
+from repro.core import binary_join, cyclic3, engine, linear3, plan_ir, star3
 from repro.core.cost_model import (  # noqa: F401  (traffic layer)
     PlanChoice, cascaded_binary_tuples, choose_cyclic_strategy,
     choose_linear_strategy, cyclic3_tuples, linear3_tuples)
+from repro.core.query import (STAR_FACT_RATIO, Classification, Predicate,
+                              Query, QueryGraphError)
+from repro.core.relation import Relation
 from repro.perfmodel import (HW, PLASTICINE, binary_cascade_time,
                              linear3_time, star3_binary_time, star3_time)
 
@@ -57,7 +74,7 @@ def choose_star_timed(n_r: float, n_s: float, n_t: float, d: float,
 
 
 # --------------------------------------------------------------------------
-# executable engine plans
+# executable engine plans (one 3-relation step)
 # --------------------------------------------------------------------------
 
 # the "no time model ran" marker: strategy forced to 3-way, time fields
@@ -65,12 +82,19 @@ def choose_star_timed(n_r: float, n_s: float, n_t: float, d: float,
 FORCED_3WAY_CHOICE = TimedChoice("3way", float("nan"), float("nan"),
                                  float("inf"), "n/a", "n/a")
 
+# legacy default column names per engine kwarg (the pre-declarative API)
+_DEFAULT_COLS = {"ra": "a", "rb": "b", "sb": "b", "sc": "c", "tc": "c",
+                 "ta": "a"}
+
+
 @dataclasses.dataclass(frozen=True)
 class EnginePlan:
-    """A sized, executable query plan: the timed 3-way/cascade decision plus
-    the shape plan the fused engine runs with.  ``run`` executes the chosen
-    strategy and returns an exact count (skew-recovered on the 3-way path,
-    capacity-retried on the cascade path)."""
+    """A sized, executable 3-relation step: the timed 3-way/cascade
+    decision plus the shape plan the fused engine runs with.  ``run``
+    executes the chosen strategy and returns an exact count — the 3-way
+    path through the recovery engine, the cascade path through the SAME
+    plan-IR executor that runs multi-step query plans (the old ad-hoc
+    cascade branch is retired)."""
 
     kind: str                                   # "linear"|"cyclic"|"star"
     strategy: str                               # "3way" | "cascade"
@@ -99,25 +123,18 @@ class EnginePlan:
         if self.strategy == "3way" or self.kind == "cyclic":
             return self.build().count(r, s, t, self.shape_plan,
                                       binding=binding, **cols)
-        # cascade fallback: size the materialized intermediate from the
-        # EXACT first-join cardinality (a cheap host-side histogram
-        # product), so skewed keys can't overflow it
-        import jax.numpy as jnp
-        import numpy as np
-        rv = np.asarray(r.col(cols.get("rb", "b")))[np.asarray(r.valid)]
-        sv = np.asarray(s.col(cols.get("sb", "b")))[np.asarray(s.valid)]
-        ru, rc = np.unique(rv, return_counts=True)
-        su, sc = np.unique(sv, return_counts=True)
-        _, ri, si = np.intersect1d(ru, su, return_indices=True)
-        inter = int((rc[ri].astype(np.int64) * sc[si]).sum())
-        res = binary_join.cascaded_binary_count(
-            r, s, t, intermediate_capacity=max(64, inter + 8), **cols)
-        assert not bool(res.intermediate_overflowed)   # exact-sized above
-        # same result contract as the 3-way engine path; cascade traffic =
-        # both inputs + the intermediate written then re-read + T
-        tuples = int(r.n) + int(s.n) + 2 * inter + int(t.n)
-        return engine.EngineResult(np.int64(int(res.count)),
-                                   jnp.asarray(False), np.int64(tuples), 1)
+        # cascade: build the 2-step plan (materialize R ⋈ S, aggregate
+        # with T) and walk it through the plan-IR executor
+        colmap = {k: cols.get(k, _DEFAULT_COLS[k])
+                  for k in ("rb", "sb", "sc", "tc")}
+        qp = plan_ir.QueryPlan(
+            steps=_cascade3_steps({"r": "r", "s": "s", "t": "t"}, colmap),
+            n_relations=3, kind=self.kind, strategy="cascade",
+            m_budget=self.m_budget, use_kernel=self.use_kernel,
+            max_rounds=self.max_rounds, growth=self.growth,
+            base_salt=self.base_salt)
+        res = plan_ir.execute_plan(qp, {"r": r, "s": s, "t": t})
+        return plan_ir.result_as_engine(res)
 
 
 def forced_3way_plan(kind: str, shape_plan, *, m_budget: int | None = None,
@@ -132,14 +149,15 @@ def forced_3way_plan(kind: str, shape_plan, *, m_budget: int | None = None,
                       growth=growth, base_salt=base_salt)
 
 
-def plan_query(kind: str, n_r: int, n_s: int, n_t: int, d: float, *,
-               m_budget: int | None = None, hw: HW = PLASTICINE,
-               use_kernel: bool = False, max_rounds: int = 3,
-               growth: float = 2.0, base_salt: int = 0,
-               **plan_kw) -> EnginePlan:
-    """Size a shape plan from the paper's partitioning rules AND pick the
-    3-way vs cascade strategy from the Appendix-A time model — returning an
-    executable plan rather than a recommendation."""
+def plan_step(kind: str, n_r: int, n_s: int, n_t: int, d: float, *,
+              m_budget: int | None = None, hw: HW = PLASTICINE,
+              use_kernel: bool = False, max_rounds: int = 3,
+              growth: float = 2.0, base_salt: int = 0,
+              **plan_kw) -> EnginePlan:
+    """Size one 3-relation shape plan from the paper's partitioning rules
+    AND pick its 3-way vs cascade strategy from the Appendix-A time model
+    — returning an executable step rather than a recommendation.  (This
+    was ``plan_query`` before the N-way decomposer took that name.)"""
     if kind in ("linear", "cyclic") and m_budget is None:
         raise ValueError(f"{kind} plans need m_budget (on-chip partition "
                          "size in tuples)")
@@ -162,3 +180,330 @@ def plan_query(kind: str, n_r: int, n_s: int, n_t: int, d: float, *,
                       choice=choice, m_budget=m_budget,
                       use_kernel=use_kernel, max_rounds=max_rounds,
                       growth=growth, base_salt=base_salt)
+
+
+# --------------------------------------------------------------------------
+# the N-way decomposer: Query -> plan_ir.QueryPlan
+# --------------------------------------------------------------------------
+
+def _distinct_est(rel: Relation, col: str) -> int:
+    """Host-side exact distinct count of a join column (the plan-time
+    seed for Swami–Schiefer estimates; FM sketches are the scale-out
+    replacement once relations stop fitting host passes)."""
+    v = np.asarray(rel.columns[col])
+    valid = np.asarray(rel.valid)
+    return max(1, int(np.unique(v[valid]).size)) if valid.any() else 1
+
+
+def estimate_d(binding) -> int:
+    """Distinct-value estimate for the time model: the hub relation's
+    R-side join column (one host pass, amortized by the plan cache)."""
+    return _distinct_est(binding.rels["s"], binding.col_kwargs()["sb"])
+
+
+def _cascade3_steps(role_names, colmap) -> tuple:
+    """The 2-step binary cascade over a 3-relation frontier: materialize
+    I = R ⋈ S exactly, aggregate I ⋈ T host-side.  ``role_names`` maps
+    engine role -> input name; ``colmap`` the rb/sb/sc/tc column keys."""
+    rn, sn, tn = role_names["r"], role_names["s"], role_names["t"]
+    rb, sb, sc, tc = colmap["rb"], colmap["sb"], colmap["sc"], colmap["tc"]
+    i0 = "%i0"
+    proj_r = ((rb, f"{rn}.{rb}"),)
+    proj_s = tuple({sb: f"{sn}.{sb}", sc: f"{sn}.{sc}"}.items())
+    step1 = plan_ir.PlanStep(
+        op="binary", out=i0, inputs=(rn, sn),
+        preds=(Predicate((rn, f"{rn}.{rb}"), (sn, f"{sn}.{sb}")),),
+        aggregate=False, project=(proj_r, proj_s))
+    step2 = plan_ir.PlanStep(
+        op="binary", out=plan_ir.COUNT, inputs=(i0, tn),
+        preds=(Predicate((i0, f"{sn}.{sc}"), (tn, tc)),), aggregate=True)
+    return (step1, step2)
+
+
+def _single_fused_plan(query: Query, cls_: Classification,
+                       ep: EnginePlan) -> plan_ir.QueryPlan:
+    """Wrap a sized 3-relation EnginePlan as a one-step QueryPlan (the
+    path every 3-relation fused query takes — plan-cache compatible)."""
+    role_map = dict(cls_.roles)
+    step = plan_ir.PlanStep(
+        op="fused3", out=plan_ir.COUNT,
+        inputs=tuple(role_map[r] for r in ("r", "s", "t")),
+        preds=(), aggregate=True, kind=cls_.kind, roles=cls_.roles,
+        cols=cls_.cols, shape_plan=ep.shape_plan, choice=ep.choice)
+    return plan_ir.QueryPlan(
+        steps=(step,), n_relations=len(query.relations), kind=cls_.kind,
+        strategy="3way", m_budget=ep.m_budget, use_kernel=ep.use_kernel,
+        max_rounds=ep.max_rounds, growth=ep.growth, base_salt=ep.base_salt)
+
+
+class _Node:
+    """One vertex of the contraction graph: a base relation or a planned
+    intermediate.  ``colmap`` maps origin ``(relation, column)`` pairs to
+    the vertex's CURRENT column keys (base columns keep their names,
+    intermediate columns are ``"rel.col"``); ``d`` carries per-origin
+    distinct estimates, capped by the vertex's estimated cardinality."""
+
+    __slots__ = ("name", "order", "card", "colmap", "d")
+
+    def __init__(self, name, order, card, colmap, d):
+        self.name, self.order, self.card = name, order, max(1, int(card))
+        self.colmap, self.d = colmap, d
+
+
+def _edge_est(nodes, e) -> float:
+    """Swami–Schiefer estimated join size of a live edge."""
+    na, nb = nodes[e["ends"][0]], nodes[e["ends"][1]]
+    d = 1
+    for o in (e["pred"].left, e["pred"].right):
+        for node in (na, nb):
+            if o in node.colmap:
+                d = max(d, node.d.get(o, 1))
+    return max(1.0, (float(na.card) * float(nb.card)) / d)
+
+
+def _contract(nodes, live, e, steps, k) -> str:
+    """Contract live edge ``e`` into a binary materialize step; returns
+    the new intermediate's name.  Projections keep exactly the origins
+    the remaining edges still reference (plus this step's join keys)."""
+    na_name, nb_name = e["ends"]
+    na, nb = nodes[na_name], nodes[nb_name]
+    out = f"%i{k}"
+    down = set()
+    for e2 in live:
+        if e2 is e:
+            continue
+        for o in (e2["pred"].left, e2["pred"].right):
+            if o in na.colmap or o in nb.colmap:
+                down.add(o)
+    jl, jr = e["pred"].left, e["pred"].right
+
+    def side(node):
+        origins = sorted({o for o in down if o in node.colmap}
+                         | {o for o in (jl, jr) if o in node.colmap})
+        proj = tuple((node.colmap[o], f"{o[0]}.{o[1]}") for o in origins)
+        return origins, proj
+
+    _, proj_a = side(na)
+    _, proj_b = side(nb)
+    key_l = jl if jl in na.colmap else jr
+    key_r = jr if key_l is jl else jl
+    pred = Predicate((na_name, f"{key_l[0]}.{key_l[1]}"),
+                     (nb_name, f"{key_r[0]}.{key_r[1]}"))
+    est_out = int(_edge_est(nodes, e))
+    steps.append(plan_ir.PlanStep(
+        op="binary", out=out, inputs=(na_name, nb_name), preds=(pred,),
+        aggregate=False, project=(proj_a, proj_b),
+        est_rows=(na.card, nb.card), est_out=est_out))
+    colmap, d = {}, {}
+    for o in down:
+        owner = na if o in na.colmap else nb
+        colmap[o] = f"{o[0]}.{o[1]}"
+        d[o] = min(owner.d.get(o, owner.card), max(1, est_out))
+    nodes[out] = _Node(out, min(na.order, nb.order), est_out, colmap, d)
+    del nodes[na_name], nodes[nb_name]
+    live.remove(e)
+    for e2 in live:
+        e2["ends"] = [out if x in (na_name, nb_name) else x
+                      for x in e2["ends"]]
+    return out
+
+
+def _node_key(nodes, node_name, pred) -> str:
+    node = nodes[node_name]
+    for o in (pred.left, pred.right):
+        if o in node.colmap:
+            return node.colmap[o]
+    raise AssertionError(f"predicate {pred} has no endpoint in {node_name}")
+
+
+def plan_query(query: Query, cards=None, *, m_budget: int | None = None,
+               hw: HW = PLASTICINE, use_kernel: bool = False,
+               max_rounds: int = 3, growth: float = 2.0, base_salt: int = 0,
+               star_fact_ratio: float | None = None,
+               strategy: str | None = None,
+               classification: Classification | None = None,
+               **plan_kw) -> plan_ir.QueryPlan:
+    """Decompose a declarative Query into an executable multi-step plan.
+
+    * 3 relations — classify (triangle / star / linear) and either emit
+      the single fused, recovery-wrapped 3-way step or (when the time
+      model or ``strategy="cascade"`` says so) the 2-step binary cascade.
+    * 2 relations — one binary aggregate step.
+    * N ≥ 4, acyclic — greedily contract the predicate tree along its
+      smallest estimated joins into binary materialize steps until three
+      vertices remain, then plan the frontier like a 3-relation query
+      (fused root sized at execute time from the live intermediates).
+
+    ``strategy``: ``None`` lets the Appendix-A time model decide per
+    root; ``"3way"`` forces the fused engine at the root; ``"cascade"``
+    forces all-binary.  ``cards`` overrides the live cardinalities.
+    """
+    if isinstance(query, str):
+        raise TypeError(
+            "plan_query now takes a core.query.Query (it is the N-way "
+            "decomposer); the 3-relation step planner is plan_step(kind, "
+            "n_r, n_s, n_t, d, ...)")
+    if strategy not in (None, "3way", "cascade"):
+        raise ValueError(f"unknown strategy {strategy!r}: pass None "
+                         "(planner decides), '3way' (force the fused "
+                         "multiway engine) or 'cascade' (force the "
+                         "binary cascade)")
+    ratio = STAR_FACT_RATIO if star_fact_ratio is None else star_fact_ratio
+    rels = query.relations
+    names = list(rels)
+    n = len(names)
+    if cards is None:
+        cards = {nm: int(rel.n) for nm, rel in rels.items()}
+    edges = query.edges()
+
+    # connectivity over ALL N relations (classify only checks 3)
+    adj: dict[str, list[str]] = {nm: [] for nm in names}
+    for key in edges:
+        a, b = tuple(key)
+        adj[a].append(b)
+        adj[b].append(a)
+    seen, frontier = {names[0]}, [names[0]]
+    while frontier:
+        for nxt in adj[frontier.pop()]:
+            if nxt not in seen:
+                seen.add(nxt)
+                frontier.append(nxt)
+    if seen != set(names):
+        missing = sorted(set(names) - seen)
+        raise QueryGraphError(
+            f"predicate graph is disconnected: relation(s) {missing} "
+            "join nothing reachable from the rest of the query")
+
+    cfg = dict(m_budget=m_budget, use_kernel=use_kernel,
+               max_rounds=max_rounds, growth=growth, base_salt=base_salt)
+
+    if n == 2:
+        if strategy == "3way":
+            raise ValueError("a 2-relation query is a single binary hash "
+                             "join; it has no 3-way plan")
+        (pred,) = edges.values()
+        step = plan_ir.PlanStep(op="binary", out=plan_ir.COUNT,
+                                inputs=(pred.left[0], pred.right[0]),
+                                preds=(pred,), aggregate=True)
+        return plan_ir.QueryPlan(steps=(step,), n_relations=2,
+                                 kind="binary", strategy="cascade", **cfg)
+
+    if n == 3:
+        cls_ = classification or query.classify(cards,
+                                                star_fact_ratio=ratio)
+        role_map = dict(cls_.roles)
+        n_r, n_s, n_t = (cards[role_map[k]] for k in ("r", "s", "t"))
+        if strategy == "cascade":
+            if cls_.kind == "cyclic":
+                raise ValueError("the cyclic (triangle) query has no "
+                                 "2-join binary cascade")
+            return plan_ir.QueryPlan(
+                steps=_cascade3_steps(role_map, dict(cls_.cols)),
+                n_relations=3, kind=cls_.kind, strategy="cascade", **cfg)
+        if strategy == "3way":
+            if cls_.kind != "star" and m_budget is None:
+                raise ValueError(f"{cls_.kind} plans need m_budget")
+            shape = engine.MultiwayJoinEngine(cls_.kind).default_plan(
+                n_r, n_s, n_t, m_budget=m_budget, **plan_kw)
+            ep = forced_3way_plan(cls_.kind, shape, **cfg)
+        else:
+            ep = plan_step(cls_.kind, n_r, n_s, n_t,
+                           estimate_d(query.bind(cls_)), hw=hw,
+                           **cfg, **plan_kw)
+        if ep.strategy == "3way":
+            return _single_fused_plan(query, cls_, ep)
+        return plan_ir.QueryPlan(
+            steps=_cascade3_steps(role_map, dict(cls_.cols)),
+            n_relations=3, kind=cls_.kind, strategy="cascade", **cfg)
+
+    # ---- N >= 4: acyclic (tree) decomposition ---------------------------
+    if classification is not None:
+        raise ValueError("forced classifications only apply to "
+                         "3-relation queries")
+    if len(edges) != n - 1:
+        raise QueryGraphError(
+            f"cyclic predicate graphs are only supported at 3 relations "
+            f"(the triangle query); this {n}-relation query has "
+            f"{len(edges)} predicates — N-way queries must form a tree "
+            "(connected and acyclic)")
+
+    nodes: dict[str, _Node] = {}
+    for i, nm in enumerate(names):
+        refs = sorted({col for p in query.predicates
+                       for rn2, col in (p.left, p.right) if rn2 == nm})
+        nodes[nm] = _Node(
+            nm, i, cards[nm], {(nm, c): c for c in refs},
+            {(nm, c): min(_distinct_est(rels[nm], c), max(1, cards[nm]))
+             for c in refs})
+    live = [{"ends": [p.left[0], p.right[0]], "pred": p}
+            for p in edges.values()]
+
+    steps: list = []
+    k = 0
+    while len(nodes) > 3:
+        e = min(enumerate(live),
+                key=lambda ie: (_edge_est(nodes, ie[1]), ie[0]))[1]
+        _contract(nodes, live, e, steps, k)
+        k += 1
+
+    # frontier: 3 vertices, 2 edges — a path; classify like a 3-rel query
+    e1, e2 = live
+    (centre,) = set(e1["ends"]) & set(e2["ends"])
+    order = sorted(nodes.values(), key=lambda nd: nd.order)
+    ends = [nd.name for nd in order if nd.name != centre]
+    rn_, tn = ends[0], ends[1]
+    e_rc = e1 if rn_ in e1["ends"] else e2
+    e_ct = e2 if e_rc is e1 else e1
+    n_r, n_s, n_t = nodes[rn_].card, nodes[centre].card, nodes[tn].card
+    kind = "star" if n_s >= ratio * max(n_r, n_t, 1) else "linear"
+    cols = (("rb", _node_key(nodes, rn_, e_rc["pred"])),
+            ("sb", _node_key(nodes, centre, e_rc["pred"])),
+            ("sc", _node_key(nodes, centre, e_ct["pred"])),
+            ("tc", _node_key(nodes, tn, e_ct["pred"])))
+    sb_origin = next(o for o in (e_rc["pred"].left, e_rc["pred"].right)
+                     if o in nodes[centre].colmap)
+    d_est = nodes[centre].d.get(sb_origin, n_s)
+    if strategy is None:
+        timed = (choose_star_timed if kind == "star"
+                 else choose_linear_timed)
+        choice = timed(n_r, n_s, n_t, d_est, hw)
+    else:
+        choice = FORCED_3WAY_CHOICE if strategy == "3way" else None
+    root_3way = (strategy == "3way"
+                 or (strategy is None and choice.strategy == "3way"))
+    if root_3way:
+        if kind != "star" and m_budget is None:
+            raise ValueError(f"{kind} plans need m_budget (on-chip "
+                             "partition size in tuples)")
+
+        def frontier_pred(e):
+            p, (a, b) = e["pred"], e["ends"]
+            return Predicate((a, _node_key(nodes, a, p)),
+                             (b, _node_key(nodes, b, p)))
+        steps.append(plan_ir.PlanStep(
+            op="fused3", out=plan_ir.COUNT, inputs=(rn_, centre, tn),
+            preds=(frontier_pred(e_rc), frontier_pred(e_ct)),
+            aggregate=True, kind=kind,
+            roles=(("r", rn_), ("s", centre), ("t", tn)), cols=cols,
+            shape_plan=None, choice=choice,
+            est_rows=(n_r, n_s, n_t)))
+        label = "hybrid" if len(steps) > 1 else "3way"
+    else:
+        # all-binary tail: contract (R, centre), aggregate with T
+        i_name = _contract(nodes, live, e_rc, steps, k)
+        (e_last,) = live
+        a, b = e_last["ends"]
+        steps.append(plan_ir.PlanStep(
+            op="binary", out=plan_ir.COUNT, inputs=(a, b),
+            preds=(Predicate((a, _node_key(nodes, a, e_last["pred"])),
+                             (b, _node_key(nodes, b, e_last["pred"]))),),
+            aggregate=True, choice=choice,
+            est_rows=(nodes[a].card, nodes[b].card)))
+        assert i_name in (a, b)
+        label = "cascade"
+    return plan_ir.QueryPlan(steps=tuple(steps), n_relations=n, kind=kind,
+                             strategy=label, **cfg)
+
+
+# re-export for callers that sized intermediates via the old helper name
+exact_join_count = binary_join.exact_join_count

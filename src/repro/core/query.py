@@ -20,6 +20,13 @@ graph-pattern systems plan from the join graph itself:
 `core.session.JoinSession` is the front door that takes a Query all the way
 to an exact, skew-recovered answer (with plan caching); the legacy entry
 points in `core.driver` are shims over this module.
+
+A Query is NOT limited to three relations: any connected acyclic
+equality-predicate hypergraph over N >= 2 named relations executes through
+the session (``planner.plan_query`` decomposes it into a
+``core.plan_ir.QueryPlan`` — a DAG of fused 3-way and binary join steps).
+``classify``/``bind`` remain the 3-relation *engine-kind* analysis that
+single fused steps are built from.
 """
 
 from __future__ import annotations
@@ -205,6 +212,14 @@ class Query:
         preds = tuple((p.left, p.right) for p in self.predicates)
         return rels, preds
 
+    def edges(self) -> dict[frozenset, Predicate]:
+        """The predicate graph's edge set: ``frozenset({rel_a, rel_b}) ->
+        Predicate``.  Validates the per-edge rules (no self-referential
+        predicates, no parallel predicates between one pair) for ANY
+        relation count — the N-way decomposer in ``core.planner`` builds
+        its join tree from this."""
+        return self._edges()
+
     def _edges(self) -> dict[frozenset, Predicate]:
         edges: dict[frozenset, Predicate] = {}
         for pred in self.predicates:
@@ -240,8 +255,12 @@ class Query:
         names = list(self.relations)
         if len(names) != 3:
             raise QueryGraphError(
-                f"the engine executes 3-relation multiway joins; got "
-                f"{len(names)} relations ({names})")
+                f"Query.classify infers the 3-relation engine kinds; got "
+                f"{len(names)} relations ({names}).  N-way acyclic queries "
+                "are supported: execute them through JoinSession.execute "
+                "(or planner.plan_query), which decomposes the predicate "
+                "graph into a multi-step plan of fused 3-way and binary "
+                "join steps")
         edges = self._edges()
         degree = {n: 0 for n in names}
         for key in edges:

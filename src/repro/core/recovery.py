@@ -44,6 +44,12 @@ Totals are accumulated host-side in Python ints and returned as
 ``np.int64`` — the fused kernels produce int32 *per-cell* partials (each
 cell must stay below 2^31, which VMEM-bounded bucket capacities guarantee),
 but the query total routinely exceeds int32 on large-cardinality joins.
+
+Multi-step plans (``core.plan_ir``) wrap every fused 3-way step in this
+round loop independently: a skewed materialized intermediate entering a
+fused root is recovered exactly like a skewed base relation, because the
+loop only ever sees (Relation, shape plan, KindOps) — it has no notion of
+where its inputs came from.
 """
 
 from __future__ import annotations

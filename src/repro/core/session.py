@@ -1,63 +1,61 @@
-"""JoinSession: one front door for plan → classify → execute → recover.
+"""JoinSession: one front door for plan → decompose → execute → recover.
 
 The session owns everything between a declarative :class:`~repro.core.query.
-Query` and an exact answer:
+Query` — over ANY connected acyclic graph of N ≥ 2 relations (cyclic stays
+supported at N = 3, the triangle query) — and an exact answer:
 
-  * **classify** — the predicate-graph analysis (`Query.classify`): linear
-    chain vs triangle cycle vs star hub, no ``kind`` strings,
-  * **plan** — the traffic/time strategy decision and shape sizing from
-    ``core.planner`` (3-way vs cascaded binary on the hardware profile),
-  * **cache** — executable plans are cached by (query structure, live
-    cardinalities, m_budget, hardware, kernel flag), so repeated queries
-    skip classification and sizing entirely (the hot path for serving the
-    same parametrized query over refreshed data),
-  * **execute / recover** — the fused ``MultiwayJoinEngine`` with the
-    shared skew-recovery rounds; ``overflowed == False`` is a
-    postcondition, and every result is a uniform :class:`QueryResult`.
+  * **decompose** — ``planner.plan_query`` turns the predicate graph into
+    a ``core.plan_ir.QueryPlan``: 3-relation queries keep their single
+    fused, recovery-wrapped step; larger trees become binary materialize
+    steps feeding a fused 3-way (or binary) root, ordered by the cost
+    model's per-step cardinality estimates,
+  * **cache** — whole multi-step plans are cached by (query structure,
+    log-bucketed cardinalities, m_budget, hardware, kernel flag, forced
+    strategy).  Bucketing the cardinalities (``sketches.card_bucket``)
+    makes the cache survive small data drift — a ±5% refresh still hits;
+    a 4x resize re-plans,
+  * **execute / recover** — ``plan_ir.execute_plan`` walks the DAG:
+    intermediates materialize exactly (host-histogram sizing), every
+    fused step runs the shared skew-recovery rounds with the session's
+    ``base_salt``, and ``overflowed == False`` is a postcondition.  The
+    returned :class:`QueryResult` aggregates count / tuples_read /
+    recovery rounds / timings across steps (``step_stats`` has the
+    per-step breakdown).
 
-``execute_sharded`` runs the same query on a device mesh through
-``distributed.engine_count_sharded`` — the binding's canonical column
-re-keying is what lets one Query serve both the local and the mesh path.
+``execute_many`` batches queries over the shared plan cache (structurally
+repeated queries plan once); ``execute_sharded`` runs a 3-relation query
+on a device mesh through ``distributed.engine_count_sharded``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any
+from typing import Any, Iterable
 
 import numpy as np
 
-from repro.core import engine, planner, recovery
-from repro.core.query import STAR_FACT_RATIO, Binding, Classification, Query
+from repro.core import engine, plan_ir, planner, recovery, sketches
+from repro.core.query import STAR_FACT_RATIO, Classification, Query
 from repro.perfmodel import HW, PLASTICINE
 
 
 @dataclasses.dataclass(frozen=True)
 class QueryResult:
-    """Uniform result for every kind and strategy."""
+    """Uniform result for every kind, strategy and relation count."""
 
     count: np.int64                       # exact cardinality (int64)
     overflowed: bool                      # False by construction
-    tuples_read: np.int64 | None          # traffic, summed over rounds
+    tuples_read: np.int64 | None          # traffic, summed over steps/rounds
     rounds: int                           # recovery rounds (1 = no skew)
-    kind: str                             # inferred: linear | cyclic | star
-    strategy: str                         # "3way" | "cascade"
+    kind: str                             # root frontier kind (or "binary")
+    strategy: str                         # "3way" | "cascade" | "hybrid"
     cache_hit: bool                       # plan came from the session cache
-    plan_s: float                         # classification + sizing seconds
-    exec_s: float                         # execution seconds
-    plan: planner.EnginePlan | None = None
+    plan_s: float                         # decompose + sizing seconds
+    exec_s: float                         # execution seconds, all steps
+    plan: plan_ir.QueryPlan | None = None
     per_r: recovery.PerRResult | None = None   # per-R aggregates (linear)
-
-
-def _estimate_d(binding: Binding) -> int:
-    """Distinct-value estimate for the planner's traffic/time models: the
-    hub relation's R-side join column (host-side exact unique count — one
-    pass, amortized by the plan cache)."""
-    s = binding.rels["s"]
-    col = np.asarray(s.columns[binding.col_kwargs()["sb"]])
-    valid = np.asarray(s.valid)
-    return max(1, int(np.unique(col[valid]).size)) if valid.any() else 1
+    step_stats: tuple = ()                # per-step plan_ir.StepStats
 
 
 class JoinSession:
@@ -70,9 +68,10 @@ class JoinSession:
     Parameters mirror the engine: ``use_kernel`` dispatches the fused
     Pallas kernels, ``max_rounds``/``growth`` shape skew recovery,
     ``base_salt`` seeds every round's hash salt (plumbed all the way into
-    the recovery rounds — a plan-level salt is never silently dropped),
-    ``hw`` is the profile the 3-way vs cascade time decision runs on, and
-    ``star_fact_ratio`` tunes the star/linear hub disambiguation.
+    the recovery rounds of every fused step — a plan-level salt is never
+    silently dropped), ``hw`` is the profile the 3-way vs cascade time
+    decisions run on, and ``star_fact_ratio`` tunes the star/linear hub
+    disambiguation.
     """
 
     def __init__(self, *, m_budget: int | None = None, hw: HW = PLASTICINE,
@@ -87,8 +86,7 @@ class JoinSession:
         self.base_salt = base_salt
         self.star_fact_ratio = (STAR_FACT_RATIO if star_fact_ratio is None
                                 else star_fact_ratio)
-        self._plan_cache: dict[Any, tuple[Classification,
-                                          planner.EnginePlan]] = {}
+        self._plan_cache: dict[Any, plan_ir.QueryPlan] = {}
         self._hits = 0
         self._misses = 0
 
@@ -105,8 +103,13 @@ class JoinSession:
     def _cache_key(self, query: Query, cards: dict[str, int],
                    m_budget: int | None, strategy: str | None,
                    forced: Classification | None):
-        return (query.schema(), tuple(sorted(cards.items())), m_budget,
-                self.hw, self.use_kernel, strategy,
+        # cardinalities enter the key LOG-BUCKETED (sketches.card_bucket):
+        # plans are estimate-sized and recovery-correct, so a few percent
+        # of data drift must not evict them — only scale changes re-plan
+        buckets = tuple(sorted((name, sketches.card_bucket(n))
+                               for name, n in cards.items()))
+        return (query.schema(), buckets, m_budget, self.hw,
+                self.use_kernel, strategy,
                 None if forced is None else (forced.kind, forced.roles,
                                              forced.cols))
 
@@ -115,41 +118,23 @@ class JoinSession:
     def _plan(self, query: Query, cards: dict[str, int],
               m_budget: int | None, strategy: str | None,
               forced: Classification | None
-              ) -> tuple[Classification, planner.EnginePlan, bool]:
-        """Classify + size, through the plan cache.  A hit skips BOTH the
-        predicate-graph analysis and the shape/strategy sizing."""
+              ) -> tuple[plan_ir.QueryPlan, bool]:
+        """Decompose + size, through the plan cache.  A hit skips the
+        graph analysis, the decomposition and the shape/strategy sizing."""
         key = self._cache_key(query, cards, m_budget, strategy, forced)
         hit = self._plan_cache.get(key)
         if hit is not None:
             self._hits += 1
-            return hit[0], hit[1], True
+            return hit, True
         self._misses += 1
-        cls_ = forced or query.classify(
-            cards, star_fact_ratio=self.star_fact_ratio)
-        binding = query.bind(cls_)
-        n_r, n_s, n_t = binding.cardinalities()
-        if strategy == "3way":
-            # forced 3-way (the legacy engine_count contract): size the
-            # shape plan, skip the time model
-            eng = engine.MultiwayJoinEngine(
-                cls_.kind, use_kernel=self.use_kernel,
-                max_rounds=self.max_rounds, growth=self.growth,
-                base_salt=self.base_salt)
-            if cls_.kind != "star" and m_budget is None:
-                raise ValueError(f"{cls_.kind} plans need m_budget")
-            shape = eng.default_plan(n_r, n_s, n_t, m_budget=m_budget)
-            ep = planner.forced_3way_plan(
-                cls_.kind, shape, m_budget=m_budget,
-                use_kernel=self.use_kernel, max_rounds=self.max_rounds,
-                growth=self.growth, base_salt=self.base_salt)
-        else:
-            ep = planner.plan_query(
-                cls_.kind, n_r, n_s, n_t, _estimate_d(binding),
-                m_budget=m_budget, hw=self.hw, use_kernel=self.use_kernel,
-                max_rounds=self.max_rounds, growth=self.growth,
-                base_salt=self.base_salt)
-        self._plan_cache[key] = (cls_, ep)
-        return cls_, ep, False
+        qp = planner.plan_query(
+            query, cards, m_budget=m_budget, hw=self.hw,
+            use_kernel=self.use_kernel, max_rounds=self.max_rounds,
+            growth=self.growth, base_salt=self.base_salt,
+            star_fact_ratio=self.star_fact_ratio, strategy=strategy,
+            classification=forced)
+        self._plan_cache[key] = qp
+        return qp, False
 
     # -- execution ---------------------------------------------------------
 
@@ -157,21 +142,25 @@ class JoinSession:
                 per_r: bool = False, key_col: str = "a",
                 plan=None, strategy: str | None = None,
                 classification: Classification | None = None) -> QueryResult:
-        """Classify, plan (or reuse a cached plan), execute, recover.
+        """Decompose (or reuse a cached plan), walk the DAG, recover.
 
-        ``plan`` overrides sizing with an explicit shape plan (skipping the
-        planner and the cache); ``strategy="3way"`` skips the time model
-        and always runs the fused multiway engine; ``classification``
-        bypasses inference (the deprecation shims use it — new code should
-        let the graph speak).
+        ``plan`` overrides sizing with an explicit 3-relation shape plan
+        (skipping the planner and the cache); ``strategy=None`` lets the
+        time model pick per root, ``"3way"`` forces the fused engine at
+        the root, ``"cascade"`` forces the all-binary cascade;
+        ``classification`` bypasses 3-relation inference (the deprecation
+        shims use it — new code should let the graph speak).
         """
-        if strategy not in (None, "3way"):
+        if strategy not in (None, "3way", "cascade"):
             raise ValueError(f"unknown strategy {strategy!r}: pass None "
-                             "(planner decides) or '3way' (force the "
-                             "fused multiway engine)")
+                             "(planner decides), '3way' (force the fused "
+                             "multiway engine) or 'cascade' (force the "
+                             "binary cascade)")
         t0 = time.perf_counter()
         m_budget = self.m_budget if m_budget is None else m_budget
         cards = {name: int(rel.n) for name, rel in query.relations.items()}
+        # the per-R aggregate is engine-only: plan its fused single step
+        eff_strategy = "3way" if (per_r and strategy is None) else strategy
         if plan is not None:
             cls_ = classification or query.classify(
                 cards, star_fact_ratio=self.star_fact_ratio)
@@ -179,46 +168,80 @@ class JoinSession:
                 cls_.kind, plan, m_budget=m_budget,
                 use_kernel=self.use_kernel, max_rounds=self.max_rounds,
                 growth=self.growth, base_salt=self.base_salt)
+            qp = planner._single_fused_plan(query, cls_, ep)
             cache_hit = False
         else:
-            cls_, ep, cache_hit = self._plan(query, cards, m_budget,
-                                             strategy, classification)
-        binding = query.bind(cls_)
+            qp, cache_hit = self._plan(query, cards, m_budget,
+                                       eff_strategy, classification)
         plan_s = time.perf_counter() - t0
 
         t1 = time.perf_counter()
-        r, s, t = binding.relations()
         if per_r:
-            # the per-R aggregate pass owns every output tuple exactly
-            # once, so COUNT is its valid-slot sum — one engine execution,
-            # not two (legacy engine_per_r_counts parity)
-            if binding.kind != "linear":
-                raise ValueError(
-                    f"per-R aggregates need a linear-classified query; "
-                    f"this one classified as {binding.kind!r}")
-            per_r_res = recovery.run_per_r_rounds(
-                binding.kind_ops(), r, s, t, ep.shape_plan,
-                max_rounds=self.max_rounds, growth=self.growth,
-                use_kernel=self.use_kernel, base_salt=self.base_salt,
-                key_col=key_col)
-            count = int(per_r_res.counts[np.asarray(per_r_res.valid)].sum())
-            exec_s = time.perf_counter() - t1
-            return QueryResult(
-                count=np.int64(count),
-                overflowed=bool(per_r_res.overflowed),
-                tuples_read=per_r_res.tuples_read,
-                rounds=int(per_r_res.rounds), kind=binding.kind,
-                strategy="3way", cache_hit=cache_hit, plan_s=plan_s,
-                exec_s=exec_s, plan=ep, per_r=per_r_res)
-        res = ep.run(r, s, t, binding=binding)
+            return self._execute_per_r(query, qp, key_col, cache_hit,
+                                       plan_s, t1)
+        res = plan_ir.execute_plan(qp, dict(query.relations))
         exec_s = time.perf_counter() - t1
         return QueryResult(
-            count=np.int64(int(res.count)),
-            overflowed=bool(res.overflowed),
-            tuples_read=np.int64(int(res.tuples_read)),
-            rounds=int(res.rounds), kind=binding.kind,
-            strategy=ep.strategy, cache_hit=cache_hit, plan_s=plan_s,
-            exec_s=exec_s, plan=ep, per_r=None)
+            count=np.int64(res.count), overflowed=bool(res.overflowed),
+            tuples_read=np.int64(res.tuples_read), rounds=int(res.rounds),
+            kind=qp.kind, strategy=qp.strategy, cache_hit=cache_hit,
+            plan_s=plan_s, exec_s=exec_s, plan=qp,
+            step_stats=res.step_stats)
+
+    def _execute_per_r(self, query: Query, qp: plan_ir.QueryPlan,
+                       key_col: str, cache_hit: bool, plan_s: float,
+                       t1: float) -> QueryResult:
+        # the per-R aggregate pass owns every output tuple exactly once,
+        # so COUNT is its valid-slot sum — one engine execution, not two
+        # (legacy engine_per_r_counts parity)
+        root = qp.root
+        if qp.n_relations != 3 or root.op != "fused3":
+            raise ValueError(
+                "per-R aggregates need a single-step fused linear plan; "
+                f"this {qp.n_relations}-relation query planned as "
+                f"{qp.strategy!r} (N-way per-R aggregates are a ROADMAP "
+                "follow-up)")
+        if root.kind != "linear":
+            raise ValueError(
+                f"per-R aggregates need a linear-classified query; "
+                f"this one classified as {root.kind!r}")
+        role_map = dict(root.roles)
+        r, s, t = (query.relations[role_map[k]] for k in ("r", "s", "t"))
+        shape = root.shape_plan
+        if shape is None:
+            shape = engine.MultiwayJoinEngine("linear").default_plan(
+                int(r.n), int(s.n), int(t.n), m_budget=qp.m_budget)
+        per_r_res = recovery.run_per_r_rounds(
+            recovery.LinearOps(**dict(root.cols)), r, s, t, shape,
+            max_rounds=qp.max_rounds, growth=qp.growth,
+            use_kernel=qp.use_kernel, base_salt=qp.base_salt,
+            key_col=key_col)
+        count = int(per_r_res.counts[np.asarray(per_r_res.valid)].sum())
+        exec_s = time.perf_counter() - t1
+        return QueryResult(
+            count=np.int64(count),
+            overflowed=bool(per_r_res.overflowed),
+            tuples_read=per_r_res.tuples_read,
+            rounds=int(per_r_res.rounds), kind=root.kind,
+            strategy="3way", cache_hit=cache_hit, plan_s=plan_s,
+            exec_s=exec_s, plan=qp, per_r=per_r_res)
+
+    # -- batched execution -------------------------------------------------
+
+    def execute_many(self, queries: Iterable[Query], *,
+                     m_budget: int | None = None,
+                     strategy: str | None = None) -> list[QueryResult]:
+        """Execute a batch of queries over the SHARED plan cache.
+
+        Structurally repeated queries (the common serving pattern: one
+        parametrized query over refreshed relations of similar size) pay
+        decomposition + sizing once — every later execution is a
+        plan-cache hit, including across ±small cardinality drift thanks
+        to the log-bucketed cache key.  Returns one QueryResult per query,
+        in input order.
+        """
+        return [self.execute(q, m_budget=m_budget, strategy=strategy)
+                for q in queries]
 
     # -- distributed -------------------------------------------------------
 
@@ -230,7 +253,9 @@ class JoinSession:
         re-key the relations to the canonical routing columns, and run the
         cross-device recovery rounds of ``distributed.engine_count_sharded``
         (``overflowed == False`` on the mesh too).  Relations should enter
-        sharded in arrival order (``distributed.shard_relation``)."""
+        sharded in arrival order (``distributed.shard_relation``); 3
+        relations only for now (N-way mesh plans are a ROADMAP follow-up).
+        """
         from repro.core import distributed
         t0 = time.perf_counter()
         cards = {name: int(rel.n) for name, rel in query.relations.items()}

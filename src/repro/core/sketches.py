@@ -14,12 +14,32 @@ bitmap k and φ ≈ 0.77351 (Flajolet–Martin 1985).
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
 from repro.core import hashing
 
 PHI = 0.77351
+
+
+def card_bucket(n: int, *, per_octave: int = 1) -> int:
+    """Log-bucketed cardinality estimate for plan-cache keys.
+
+    Plans are estimate-sized and recovery-correct, so the session cache
+    keys on the *scale* of each relation rather than its exact row count:
+    ``round(log2(n) * per_octave)``.  Small data drift (a ±5% refresh of
+    a served relation, away from a bucket boundary) maps to the same
+    bucket and HITS; a 4x resize always moves ≥ ``2 * per_octave``
+    buckets and re-plans.  This is the cheap stand-in for keying on an
+    FM-sketch cardinality estimate (same idea: a coarse, drift-stable
+    summary instead of the exact count).
+    """
+    n = int(n)
+    if n <= 0:
+        return -1
+    return int(round(math.log2(n) * per_octave))
 
 
 def empty(n_registers: int = 32) -> jnp.ndarray:

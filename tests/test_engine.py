@@ -225,7 +225,7 @@ def test_planner_engine_plan_runs(rng):
     s, sd = make_rel(rng, 180, ("b", "c"), 37)
     t, td = make_rel(rng, 160, ("c", "d"), 37)
     want = oracle_linear3_count(rd["b"], sd["b"], sd["c"], td["c"])
-    ep = planner.plan_query("linear", 150, 180, 160, 37, m_budget=48, u=4)
+    ep = planner.plan_step("linear", 150, 180, 160, 37, m_budget=48, u=4)
     assert ep.strategy in ("3way", "cascade")
     res = ep.run(r, s, t)
     assert int(res.count) == want
@@ -237,8 +237,8 @@ def test_planner_cyclic_always_3way(rng):
     t, td = make_rel(rng, 130, ("c", "a"), 31)
     want = oracle_cyclic3_count(rd["a"], rd["b"], sd["b"], sd["c"],
                                 td["c"], td["a"])
-    ep = planner.plan_query("cyclic", 140, 150, 130, 31, m_budget=64,
-                            uh=4, ug=2)
+    ep = planner.plan_step("cyclic", 140, 150, 130, 31, m_budget=64,
+                           uh=4, ug=2)
     assert ep.strategy == "3way"
     res = ep.run(r, s, t)
     assert int(res.count) == want

@@ -1,0 +1,406 @@
+"""N-way plan IR: decomposer, DAG execution, cache drift, satellites.
+
+Covers the multi-step front door: 4+-relation acyclic queries decompose
+into binary materialize steps feeding a fused (recovery-wrapped) 3-way
+root and match a brute-force oracle exactly — including under adversarial
+skew; 3-relation queries keep their single-step fused plans and cache
+behavior; 2-relation queries execute as one exact binary step; the plan
+cache survives ±5% data drift (log-bucketed cardinality keys) but not a
+4x resize; ``execute_many`` amortizes planning over the cache; and the
+legacy shims' DeprecationWarning points at the caller.
+"""
+
+import warnings
+from collections import defaultdict
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_rel, skewed_keys
+from repro.core import driver, plan_ir, planner
+from repro.core.query import Query, QueryGraphError
+from repro.core.relation import Relation
+from repro.core.session import JoinSession
+
+
+# --------------------------------------------------------------------------
+# oracles
+# --------------------------------------------------------------------------
+
+def oracle_nway(columns, predicates):
+    """Brute-force N-way join count: successive hash-join materialization
+    with python dicts (rows = lists of (relation, row-index) bindings).
+    ``columns``: name -> dict[col -> np.ndarray]; ``predicates``: list of
+    ((rel, col), (rel, col)) equality pairs."""
+    preds = [(tuple(left), tuple(right)) for left, right in predicates]
+    joined = {preds[0][0][0]}
+    n0 = len(next(iter(columns[preds[0][0][0]].values())))
+    rows = [{preds[0][0][0]: i} for i in range(n0)]
+    pending = list(preds)
+    while pending:
+        for p in pending:
+            (lr, lc), (rr, rc) = p
+            if (lr in joined) != (rr in joined):
+                break
+        else:
+            raise AssertionError("disconnected predicate set")
+        pending.remove(p)
+        if lr in joined:
+            (old_r, old_c), (new_r, new_c) = (lr, lc), (rr, rc)
+        else:
+            (old_r, old_c), (new_r, new_c) = (rr, rc), (lr, lc)
+        if new_r in joined:        # both sides already joined: filter
+            rows = [bind for bind in rows
+                    if columns[old_r][old_c][bind[old_r]]
+                    == columns[new_r][new_c][bind[new_r]]]
+            continue
+        by_val = defaultdict(list)
+        for j, v in enumerate(columns[new_r][new_c].tolist()):
+            by_val[v].append(j)
+        out = []
+        for bind in rows:
+            v = int(columns[old_r][old_c][bind[old_r]])
+            for j in by_val.get(v, ()):
+                out.append({**bind, new_r: j})
+        rows = out
+        joined.add(new_r)
+    return len(rows)
+
+
+def _chain_query(rels):
+    """r1.b=r2.b, r2.c=r3.c, ... over relations with columns (a, b),
+    (b, c), (c, d), ..."""
+    names = [f"r{i + 1}" for i in range(len(rels))]
+    cols = "abcdefgh"
+    preds = [(f"{names[i]}.{cols[i + 1]}", f"{names[i + 1]}.{cols[i + 1]}")
+             for i in range(len(rels) - 1)]
+    return Query(dict(zip(names, rels)), preds)
+
+
+def _chain_oracle(rels, cols="abcdefgh"):
+    """Exact chain count via weight backflow (independent of the IR)."""
+    w = np.ones(int(rels[-1].capacity), np.int64)
+    w[~np.asarray(rels[-1].valid)] = 0
+    for i in range(len(rels) - 1, 0, -1):
+        key = cols[i]
+        cnt = defaultdict(int)
+        right = np.asarray(rels[i].col(key)).tolist()
+        for k, wv, ok in zip(right, w.tolist(),
+                             np.asarray(rels[i].valid).tolist()):
+            if ok:
+                cnt[k] += wv
+        left = np.asarray(rels[i - 1].col(key)).tolist()
+        w = np.array([cnt.get(k, 0) for k in left], np.int64)
+        w[~np.asarray(rels[i - 1].valid)] = 0
+    return int(w.sum())
+
+
+# --------------------------------------------------------------------------
+# tentpole: 4+-relation queries end-to-end
+# --------------------------------------------------------------------------
+
+def test_4way_chain_executes_with_fused_root(rng):
+    """Acceptance: a 4-relation acyclic Query runs end-to-end (no
+    QueryGraphError), its plan has >= 2 steps with a fused 3-way step,
+    the count matches the oracle and overflowed is False."""
+    rels = [make_rel(rng, 1500, (c1, c2), 300)[0]
+            for c1, c2 in (("a", "b"), ("b", "c"), ("c", "d"), ("d", "e"))]
+    q = _chain_query(rels)
+    res = JoinSession(m_budget=256).execute(q)
+    assert int(res.count) == _chain_oracle(rels)
+    assert not res.overflowed
+    assert len(res.plan.steps) >= 2
+    assert len(res.plan.fused3_steps) >= 1
+    assert res.plan.fused3_steps[0].recovery
+    assert res.strategy == "hybrid"
+    assert res.plan.root.out == plan_ir.COUNT
+    # per-step stats aggregate onto the result
+    assert sum(s.tuples_read for s in res.step_stats) == int(res.tuples_read)
+    assert sum(s.rounds for s in res.step_stats) == int(res.rounds)
+
+
+def test_5way_star_schema_fact_plus_dims(rng):
+    """The README example shape: one fact table, 4 dimension tables, all
+    predicates fact-to-dim (a degree-4 star graph)."""
+    fact, _ = make_rel(rng, 6000, ("k1", "k2", "k3", "k4"), 150)
+    dims = [make_rel(rng, 300, (f"k{i + 1}", "x"), 150)[0]
+            for i in range(4)]
+    names = {"fact": fact, **{f"d{i + 1}": dims[i] for i in range(4)}}
+    q = Query(names, [(f"fact.k{i + 1}", f"d{i + 1}.k{i + 1}")
+                      for i in range(4)])
+    res = JoinSession(m_budget=256).execute(q)
+    # oracle: per-fact-row product of dimension match counts
+    want = np.ones(6000, np.int64)
+    for i in range(4):
+        cnt = defaultdict(int)
+        for v in np.asarray(dims[i].col(f"k{i + 1}")).tolist():
+            cnt[v] += 1
+        want *= np.array([cnt.get(v, 0) for v in
+                          np.asarray(fact.col(f"k{i + 1}")).tolist()],
+                         np.int64)
+    assert int(res.count) == int(want.sum())
+    assert not res.overflowed
+    assert len(res.plan.steps) >= 2
+    assert len(res.plan.fused3_steps) >= 1
+
+
+def test_4way_skewed_recovery_exact(rng):
+    """Adversarial heavy hitters in the ROOT join columns: the fused root
+    step must recover (overflowed == False postcondition) and the count
+    must stay exact."""
+    n = 400
+    r1 = Relation.from_arrays(a=rng.integers(0, 99, n).astype(np.int32),
+                              b=skewed_keys(rng, n, 30, 0.4))
+    r2 = Relation.from_arrays(b=skewed_keys(rng, n, 30, 0.4),
+                              c=skewed_keys(rng, n, 30, 0.4, 2))
+    r3 = Relation.from_arrays(c=skewed_keys(rng, n, 30, 0.4, 2),
+                              d=rng.integers(0, 25, n).astype(np.int32))
+    r4 = Relation.from_arrays(d=rng.integers(0, 25, n).astype(np.int32),
+                              e=rng.integers(0, 99, n).astype(np.int32))
+    rels = [r1, r2, r3, r4]
+    q = _chain_query(rels)
+    res = JoinSession(m_budget=64).execute(q, strategy="3way")
+    assert int(res.count) == _chain_oracle(rels)
+    assert not res.overflowed
+    assert len(res.plan.fused3_steps) == 1
+
+
+def test_2way_query_single_binary_step(rng):
+    r, rd = make_rel(rng, 200, ("a", "b"), 25)
+    s, sd = make_rel(rng, 240, ("b", "c"), 25)
+    q = Query({"r": r, "s": s}, [("r.b", "s.b")])
+    res = JoinSession().execute(q)
+    cnt = defaultdict(int)
+    for v in sd["b"].tolist():
+        cnt[v] += 1
+    want = sum(cnt.get(v, 0) for v in rd["b"].tolist())
+    assert int(res.count) == want
+    assert len(res.plan.steps) == 1 and res.strategy == "cascade"
+    with pytest.raises(ValueError, match="3-way"):
+        JoinSession().execute(q, strategy="3way")
+
+
+def test_3rel_queries_keep_single_step_fused_plans(rng):
+    """Acceptance: existing 3-relation queries still take the single-step
+    fused path, with plan-cache hits intact."""
+    r, _ = make_rel(rng, 2000, ("a", "b"), 300)
+    s, _ = make_rel(rng, 2000, ("b", "c"), 300)
+    t, _ = make_rel(rng, 2000, ("c", "d"), 300)
+    sess = JoinSession(m_budget=256)
+    q = Query({"r": r, "s": s, "t": t}, [("r.b", "s.b"), ("s.c", "t.c")])
+    cold = sess.execute(q)
+    assert cold.strategy == "3way" and len(cold.plan.steps) == 1
+    assert cold.plan.steps[0].op == "fused3"
+    assert cold.plan.steps[0].shape_plan is not None   # plan-time sized
+    warm = sess.execute(q)
+    assert warm.cache_hit and int(warm.count) == int(cold.count)
+
+
+def test_3rel_cascade_runs_through_ir(rng):
+    """The time model picks the cascade at small sizes; it must now
+    execute as a 2-step IR plan (the EnginePlan.run ad-hoc branch is
+    retired) and still match the fused count."""
+    r, _ = make_rel(rng, 120, ("a", "b"), 20)
+    s, _ = make_rel(rng, 130, ("b", "c"), 20)
+    t, _ = make_rel(rng, 110, ("c", "d"), 20)
+    q = Query({"r": r, "s": s, "t": t}, [("r.b", "s.b"), ("s.c", "t.c")])
+    sess = JoinSession(m_budget=64)
+    res = sess.execute(q, strategy="cascade")
+    assert res.strategy == "cascade"
+    assert [st.op for st in res.plan.steps] == ["binary", "binary"]
+    fused = sess.execute(q, strategy="3way")
+    assert int(res.count) == int(fused.count)
+    # the legacy EnginePlan.run cascade delegates to the same executor
+    ep = planner.plan_step("linear", 120, 130, 110, 20, m_budget=64)
+    assert int(ep.run(r, s, t).count) == int(res.count)
+
+
+def test_nway_cyclic_rejected_with_pointer(rng):
+    r, _ = make_rel(rng, 50, ("a", "b"), 10)
+    s, _ = make_rel(rng, 50, ("b", "c"), 10)
+    t, _ = make_rel(rng, 50, ("c", "d"), 10)
+    u, _ = make_rel(rng, 50, ("d", "a"), 10)
+    q = Query({"r": r, "s": s, "t": t, "u": u},
+              [("r.b", "s.b"), ("s.c", "t.c"), ("t.d", "u.d"),
+               ("u.a", "r.a")])
+    with pytest.raises(QueryGraphError, match="tree"):
+        JoinSession(m_budget=64).execute(q)
+    # the 3-relation classifier points 4+-relation users at the N-way API
+    with pytest.raises(QueryGraphError, match="JoinSession"):
+        q.classify()
+
+
+def test_nway_disconnected_rejected(rng):
+    r, _ = make_rel(rng, 50, ("a", "b"), 10)
+    s, _ = make_rel(rng, 50, ("b", "c"), 10)
+    t, _ = make_rel(rng, 50, ("c", "d"), 10)
+    u, _ = make_rel(rng, 50, ("x", "y"), 10)
+    v, _ = make_rel(rng, 50, ("y", "z"), 10)
+    q = Query({"r": r, "s": s, "t": t, "u": u, "v": v},
+              [("r.b", "s.b"), ("s.c", "t.c"), ("u.y", "v.y")])
+    with pytest.raises(QueryGraphError, match="disconnected"):
+        JoinSession(m_budget=64).execute(q)
+
+
+# --------------------------------------------------------------------------
+# hypothesis: random acyclic 4-6 relation trees vs the brute-force oracle
+# --------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_rel=st.integers(4, 6),
+       skew=st.booleans())
+def test_random_tree_queries_match_oracle(seed, n_rel, skew):
+    """Property: for random acyclic join trees over 4-6 relations (uniform
+    AND heavy-hitter data), JoinSession.execute == brute force."""
+    rng = np.random.default_rng(seed)
+    d = 12
+    parents = [int(rng.integers(0, i)) for i in range(1, n_rel)]
+    names = [f"q{i}" for i in range(n_rel)]
+    # relation i gets one column per incident tree edge (+ a payload)
+    cols = {nm: {} for nm in names}
+    preds = []
+    for i, p in enumerate(parents, start=1):
+        col = f"j{i}"
+        n_child = int(rng.integers(20, 36))
+        n_parent = len(next(iter(cols[names[p]].values()))) \
+            if cols[names[p]] else int(rng.integers(20, 36))
+
+        def keys(n):
+            if skew:
+                return skewed_keys(rng, n, d, 0.3)
+            return rng.integers(0, d, n).astype(np.int32)
+
+        cols[names[i]][col] = keys(n_child)
+        cols[names[p]][col] = keys(n_parent)
+        preds.append((f"{names[p]}.{col}", f"{names[i]}.{col}"))
+    for nm in names:   # pad relations that ended up with one column
+        n = len(next(iter(cols[nm].values())))
+        for other in cols[nm].values():
+            assert len(other) == n
+        cols[nm]["pay"] = rng.integers(0, 5, n).astype(np.int32)
+    rels = {nm: Relation.from_arrays(**cs) for nm, cs in cols.items()}
+    q = Query(rels, preds)
+    want = oracle_nway(
+        cols, [(tuple(left.split(".")), tuple(right.split(".")))
+               for left, right in preds])
+    sess = JoinSession(m_budget=64)
+    forced = sess.execute(q, strategy="3way")
+    assert int(forced.count) == want
+    assert not forced.overflowed
+    assert len(forced.plan.fused3_steps) == 1
+    default = sess.execute(q)
+    assert int(default.count) == want
+    assert not default.overflowed
+
+
+def test_shared_join_column_across_edges(rng):
+    """One column feeding two tree edges (r2.b joins r1.b AND r3.b): the
+    projection/origin bookkeeping must carry it through intermediates."""
+    r1, _ = make_rel(rng, 40, ("a", "b"), 8)
+    r2 = Relation.from_arrays(b=rng.integers(0, 8, 40).astype(np.int32))
+    r3, _ = make_rel(rng, 40, ("b", "c"), 8)
+    r4, _ = make_rel(rng, 40, ("c", "e"), 8)
+    q = Query({"r1": r1, "r2": r2, "r3": r3, "r4": r4},
+              [("r1.b", "r2.b"), ("r2.b", "r3.b"), ("r3.c", "r4.c")])
+    cols = {nm: {k: np.asarray(v) for k, v in rel.columns.items()}
+            for nm, rel in q.relations.items()}
+    want = oracle_nway(cols, [(("r1", "b"), ("r2", "b")),
+                              (("r2", "b"), ("r3", "b")),
+                              (("r3", "c"), ("r4", "c"))])
+    for strat in (None, "3way", "cascade"):
+        res = JoinSession(m_budget=64).execute(q, strategy=strat)
+        assert int(res.count) == want and not res.overflowed
+
+
+def test_nway_self_join_aliases(rng):
+    """friends^4: one Relation under four aliases, a 4-chain."""
+    f, _ = make_rel(rng, 60, ("src", "dst"), 12)
+    q = Query({f"f{i}": f for i in (1, 2, 3, 4)},
+              [("f1.dst", "f2.src"), ("f2.dst", "f3.src"),
+               ("f3.dst", "f4.src")])
+    cols = {f"f{i}": {k: np.asarray(v) for k, v in f.columns.items()}
+            for i in (1, 2, 3, 4)}
+    want = oracle_nway(cols, [(("f1", "dst"), ("f2", "src")),
+                              (("f2", "dst"), ("f3", "src")),
+                              (("f3", "dst"), ("f4", "src"))])
+    for strat in (None, "3way", "cascade"):
+        res = JoinSession(m_budget=64).execute(q, strategy=strat)
+        assert int(res.count) == want and not res.overflowed
+
+
+# --------------------------------------------------------------------------
+# satellites: cache drift, execute_many, deprecation stacklevel
+# --------------------------------------------------------------------------
+
+def test_plan_cache_survives_small_drift_not_resize(rng):
+    """±5% cardinality drift hits the log-bucketed cache; 4x misses."""
+    def build(n):
+        r, _ = make_rel(rng, n, ("a", "b"), 50)
+        s, _ = make_rel(rng, n, ("b", "c"), 50)
+        t, _ = make_rel(rng, n, ("c", "d"), 50)
+        return Query({"r": r, "s": s, "t": t},
+                     [("r.b", "s.b"), ("s.c", "t.c")])
+    sess = JoinSession(m_budget=64)
+    cold = sess.execute(build(1000))
+    assert not cold.cache_hit
+    drifted = sess.execute(build(1050))       # +5%: same log2 bucket
+    assert drifted.cache_hit
+    assert not drifted.overflowed             # stale sizing is recovered
+    shrunk = sess.execute(build(953))         # -5%: same bucket
+    assert shrunk.cache_hit
+    resized = sess.execute(build(4000))       # 4x: always >= 2 buckets away
+    assert not resized.cache_hit
+    # counts stay exact regardless of hit/miss
+    q = build(1050)
+    hit = sess.execute(q)
+    sess2 = JoinSession(m_budget=64)
+    fresh = sess2.execute(q)
+    assert hit.cache_hit and not fresh.cache_hit
+    assert int(hit.count) == int(fresh.count)
+
+
+def test_execute_many_amortizes_planning(rng):
+    """Batched execution: one decomposition, K-1 cache hits, all exact."""
+    rels = [make_rel(rng, 900, (c1, c2), 60)[0]
+            for c1, c2 in (("a", "b"), ("b", "c"), ("c", "d"), ("d", "e"))]
+    queries = [_chain_query(rels) for _ in range(5)]
+    sess = JoinSession(m_budget=128)
+    results = sess.execute_many(queries)
+    assert len(results) == 5
+    assert not results[0].cache_hit
+    assert all(r.cache_hit for r in results[1:])
+    want = _chain_oracle(rels)
+    assert all(int(r.count) == want for r in results)
+    assert sess.cache_info["misses"] == 1
+    assert sess.cache_info["hits"] == 4
+
+
+def test_deprecation_warning_points_at_caller(rng):
+    """The shim's DeprecationWarning must carry THIS file's location (the
+    caller), not driver.py's — that is what makes migration actionable."""
+    r, _ = make_rel(rng, 60, ("a", "b"), 10)
+    s, _ = make_rel(rng, 60, ("b", "c"), 10)
+    t, _ = make_rel(rng, 60, ("c", "d"), 10)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        driver.engine_count("linear", r, s, t, m_budget=64)
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
+    assert dep and dep[0].filename == __file__
+
+
+def test_card_bucket_properties():
+    from repro.core import sketches
+    assert sketches.card_bucket(1000) == sketches.card_bucket(1050)
+    assert sketches.card_bucket(1000) == sketches.card_bucket(953)
+    assert abs(sketches.card_bucket(4000) - sketches.card_bucket(1000)) >= 2
+    assert sketches.card_bucket(0) == -1
+
+
+def test_plan_describe_is_stable(rng):
+    rels = [make_rel(rng, 100, (c1, c2), 10)[0]
+            for c1, c2 in (("a", "b"), ("b", "c"), ("c", "d"), ("d", "e"))]
+    qp = planner.plan_query(_chain_query(rels), m_budget=64,
+                            strategy="3way")
+    text = qp.describe()
+    assert "fused3" in text and "%count" in text and "%i0" in text

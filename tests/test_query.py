@@ -136,7 +136,7 @@ def test_schema_validation_raises(rng):
        kind=st.sampled_from(["linear", "cyclic", "star"]))
 def test_session_matches_legacy_entry_points(seed, d, kind):
     """Hypothesis parity: for every kind, the declarative path returns the
-    same exact count as legacy ``engine_count`` AND ``plan_query().run()``
+    same exact count as legacy ``engine_count`` AND ``plan_step().run()``
     (no kind string crosses the new API)."""
     rng = np.random.default_rng(seed)
     if kind == "star":
@@ -164,7 +164,7 @@ def test_session_matches_legacy_entry_points(seed, d, kind):
         legacy = driver.engine_count(kind, r, s, t, m_budget=64)
     assert int(res.count) == int(legacy.count)
     n_r, n_s, n_t = int(r.n), int(s.n), int(t.n)
-    ep = planner.plan_query(kind, n_r, n_s, n_t, d, m_budget=64)
+    ep = planner.plan_step(kind, n_r, n_s, n_t, d, m_budget=64)
     assert int(ep.run(r, s, t).count) == int(res.count)
 
 
@@ -266,8 +266,8 @@ def test_plan_cache_hits_and_invalidates(rng, monkeypatch):
 def test_engine_plan_build_keeps_base_salt(rng):
     """Regression: EnginePlan.build() used to drop base_salt, silently
     de-randomizing every recovery round on the planner path."""
-    ep = planner.plan_query("linear", 100, 100, 100, 10, m_budget=64,
-                            base_salt=7)
+    ep = planner.plan_step("linear", 100, 100, 100, 10, m_budget=64,
+                           base_salt=7)
     assert ep.base_salt == 7
     assert ep.build().base_salt == 7
     # the session plumbs its base_salt into the recovery rounds
