@@ -74,6 +74,24 @@ def main() -> int:
             failures.append(
                 f"{name}: speedup regressed {b['speedup']:.2f}x -> "
                 f"{n['speedup']:.2f}x (> {args.tolerance:.0%} slowdown)")
+    # absolute floor (not baseline-relative): the calibrated default plan
+    # must never lose to the forced all-binary cascade.  The bench pins
+    # the ratio to exactly 1.0 when the calibrated pick IS the cascade
+    # (identical plans), so >= 1.0 only fails when a genuinely slower
+    # root was picked — a calibration or executor regression.
+    c4 = new_shapes.get("cascade_4way", {})
+    if "ir_vs_binary" in c4:
+        status = "OK " if c4["ir_vs_binary"] >= 1.0 else "REG"
+        print(f"  [{status}] cascade_4way: ir_vs_binary "
+              f"{c4['ir_vs_binary']:.2f}x (floor 1.00x, absolute)")
+        if c4["ir_vs_binary"] < 1.0:
+            failures.append(
+                f"cascade_4way: calibrated default plan slower than the "
+                f"all-binary cascade ({c4['ir_vs_binary']:.2f}x < 1.0)")
+    elif "cascade_4way" in base_shapes and "ir_vs_binary" in base_shapes[
+            "cascade_4way"]:
+        failures.append("cascade_4way: 'ir_vs_binary' missing from new "
+                        "run (baseline has one)")
     # NOTE: the claim_* booleans in the JSON are a record, not a gate here —
     # the per-shape speedup-ratio floor above is the regression signal
     # (absolute claim thresholds re-checked on a noisy runner would flap).

@@ -15,31 +15,115 @@ Two execution paths:
 The cascade (first join materialized, second join aggregated) reproduces the
 paper's binary baseline, including the bounded intermediate buffer whose
 overflow models the DRAM/SSD spill cliff.
+
+Device-resident sizing and the staged pipeline
+----------------------------------------------
+``exact_join_count`` used to be two host ``np.unique`` passes; it is now a
+device-side sorted-key histogram: sort the build keys once, ``searchsorted``
+the probe keys against them (per-probe segment counts), and reduce those
+counts exactly in int64 via the two-limb base-2^15 trick the engine's
+``Traffic64`` counters use (x64 stays off framework-wide).  The only
+host↔device traffic is the two-scalar total.  The same primitive split into
+``stage_join`` (sort + ranges + count, one jitted dispatch) and
+``gather_staged`` (prefix-sum offsets + gather-materialize into a
+bucketed-capacity buffer, one jitted dispatch) is the plan executor's
+compiled binary-step pipeline: a cascade of binary steps never moves a
+column to the host.  ``host_join_count`` keeps the old ``np.unique``
+histogram as the parity oracle.
 """
 
 from __future__ import annotations
 
+import functools
+import math
 from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import partition
-from repro.core.relation import Relation
+from repro.core.relation import SENTINEL, Relation
+
+_MASK15 = 0x7FFF
 
 
-def exact_join_count(build: Relation, build_key: str,
-                     probe: Relation, probe_key: str) -> int:
-    """Exact ``|build ⋈ probe|`` via host-side key histograms (int64 —
-    immune to the int32 device counters).  The plan IR uses this both to
-    size materialized intermediates exactly (a materialize step cannot
-    overflow) and as the root aggregate of an all-binary cascade."""
+def host_join_count(build: Relation, build_key: str,
+                    probe: Relation, probe_key: str) -> int:
+    """Exact ``|build ⋈ probe|`` via host-side key histograms (np.unique +
+    intersect1d).  The former ``exact_join_count`` — kept as the parity
+    oracle for the device-side path; nothing on the execution hot path
+    calls it."""
     bv = np.asarray(build.col(build_key))[np.asarray(build.valid)]
     pv = np.asarray(probe.col(probe_key))[np.asarray(probe.valid)]
     bu, bc = np.unique(bv, return_counts=True)
     pu, pc = np.unique(pv, return_counts=True)
     _, bi, pi = np.intersect1d(bu, pu, return_indices=True)
     return int((bc[bi].astype(np.int64) * pc[pi].astype(np.int64)).sum())
+
+
+def _sum64(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact Σx over non-negative int32 values as two int32 limbs
+    ``(hi, lo)`` with ``lo < 2^30`` and ``hi`` in units of 2^30 (the
+    ``engine.Traffic64`` representation; ``int(hi) << 30 | lo`` recombines
+    host-side).
+
+    x64 is off framework-wide, so the reduction runs in base-2^15 limb
+    planes: each plane value stays < 2^15, chunked partial sums of 2^14
+    elements stay < 2^30, and carries re-normalize between levels.  Exact
+    for totals < 2^61.
+    """
+    x = x.reshape(-1)
+    if x.shape[0] == 0:
+        return jnp.int32(0), jnp.int32(0)
+    # base-2^15 limb planes of each element (x < 2^31 ⇒ 3 planes)
+    planes = [x & _MASK15, (x >> 15) & _MASK15, x >> 30]
+    chunk = 1 << 14
+    while planes[0].shape[0] > 1:
+        n = planes[0].shape[0]
+        m = -(-n // chunk)
+        pad = m * chunk - n
+        carry = None
+        nxt = []
+        for p in planes:
+            s = jnp.sum(jnp.pad(p, (0, pad)).reshape(m, chunk), axis=1)
+            if carry is not None:
+                s = s + carry            # partial < 2^29 + 2^15 < 2^30
+            nxt.append(s & _MASK15)
+            carry = s >> 15              # < 2^15: a valid next plane
+        nxt.append(carry)
+        planes = nxt
+    p = [pl.reshape(()) for pl in planes] + [jnp.int32(0)] * 5
+    lo = p[0] + (p[1] << 15)
+    hi = p[2] + (p[3] << 15) + (p[4] << 30)
+    return hi, lo
+
+
+def _device_count(build: Relation, probe: Relation, *, build_key: str,
+                  probe_key: str):
+    """Sorted-key histogram count: per-probe segment counts + exact
+    two-limb reduction, all on device."""
+    _, skeys = partition.sort_by_key(build, build_key)
+    lo, hi = match_ranges(skeys, probe.col(probe_key))
+    cnt = jnp.where(probe.valid, hi - lo, 0).astype(jnp.int32)
+    return _sum64(cnt)
+
+
+_device_count_jit = jax.jit(_device_count,
+                            static_argnames=("build_key", "probe_key"))
+
+
+def exact_join_count(build: Relation, build_key: str,
+                     probe: Relation, probe_key: str) -> int:
+    """Exact ``|build ⋈ probe|``, int64-exact without x64: one jitted
+    device dispatch (sort + searchsorted segment counts + two-limb
+    reduction), one two-scalar transfer.  The plan IR uses this both to
+    size materialized intermediates exactly (a materialize step cannot
+    overflow) and as the root aggregate of an all-binary cascade —
+    ``host_join_count`` is the np.unique oracle it is tested against."""
+    hi, lo = _device_count_jit(build, probe, build_key=build_key,
+                               probe_key=probe_key)
+    return (int(hi) << 30) + int(lo)
 
 
 # --------------------------------------------------------------------------
@@ -120,6 +204,97 @@ def join_materialize(build: Relation, build_key: str,
             continue
         cols[key] = jnp.where(ok, col[owner], jnp.int32(-0x7FFFFFFF))
     return JoinResult(Relation(cols, ok), total, total > out_capacity)
+
+
+# --------------------------------------------------------------------------
+# compiled binary-step pipeline (the plan executor's hot path)
+# --------------------------------------------------------------------------
+
+class StagedJoin(NamedTuple):
+    """Stage 1 of a pipelined binary step, still on device: the sorted
+    build side, the per-probe match ranges, and the exact two-limb total.
+    ``staged_total`` syncs the two scalars; ``gather_staged`` finishes the
+    materialization without re-sorting."""
+
+    sorted_build: Relation     # build side sorted by its join key
+    lo: jnp.ndarray            # (probe_cap,) int32 match-range starts
+    cnt: jnp.ndarray           # (probe_cap,) int32 per-probe match counts
+    total_hi: jnp.ndarray      # () int32, units of 2^30
+    total_lo: jnp.ndarray      # () int32, < 2^30
+
+
+def _stage_core(build: Relation, probe: Relation, *, build_key: str,
+                probe_key: str) -> StagedJoin:
+    sbuild, skeys = partition.sort_by_key(build, build_key)
+    lo, hi = match_ranges(skeys, probe.col(probe_key))
+    cnt = jnp.where(probe.valid, hi - lo, 0).astype(jnp.int32)
+    thi, tlo = _sum64(cnt)
+    return StagedJoin(sbuild, lo, cnt, thi, tlo)
+
+
+stage_join = jax.jit(_stage_core, static_argnames=("build_key", "probe_key"))
+
+
+def staged_total(staged: StagedJoin) -> int:
+    """Host-sync the exact join cardinality of a staged step (two int32
+    scalars — the pipeline's only host↔device traffic)."""
+    return (int(staged.total_hi) << 30) + int(staged.total_lo)
+
+
+def bucket_capacity(total: int) -> int:
+    """Static materialization capacity for an exact row total: the next
+    power of two (>= 64).  Log-bucketing the shape (same idea as
+    ``sketches.card_bucket``) means refreshed executions at a similar
+    scale hit the SAME compiled gather — at most 2x buffer slack."""
+    return max(64, 1 << math.ceil(math.log2(int(total) + 8)))
+
+
+def _gather_core(sorted_build: Relation, lo: jnp.ndarray, cnt: jnp.ndarray,
+                 probe: Relation, *, out_capacity: int,
+                 build_prefix: str = "", probe_prefix: str = "") -> Relation:
+    """Stage 2: prefix-sum offsets + gather-materialize (one dispatch).
+    ``out_capacity`` must cover the staged total (int32 offsets)."""
+    off = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(cnt)])
+    total = off[-1]
+    slots = jnp.arange(out_capacity, dtype=jnp.int32)
+    owner = jnp.searchsorted(off, slots, side="right").astype(jnp.int32) - 1
+    owner = jnp.clip(owner, 0, probe.capacity - 1)
+    rank = slots - off[owner]
+    bidx = jnp.clip(lo[owner] + rank, 0, sorted_build.capacity - 1)
+    ok = slots < total
+    cols = {}
+    for name, col in sorted_build.columns.items():
+        cols[build_prefix + name] = jnp.where(ok, col[bidx],
+                                              jnp.int32(SENTINEL))
+    for name, col in probe.columns.items():
+        key = probe_prefix + name
+        if key in cols:  # join column appears once
+            continue
+        cols[key] = jnp.where(ok, col[owner], jnp.int32(SENTINEL))
+    return Relation(cols, ok)
+
+
+@functools.lru_cache(maxsize=None)
+def _gather_jit(donate: bool):
+    statics = ("out_capacity", "build_prefix", "probe_prefix")
+    if donate:
+        # the staged buffers are consumed here; donating them lets XLA
+        # reuse the sorted-build storage for the materialized output
+        return jax.jit(_gather_core, static_argnames=statics,
+                       donate_argnums=(0, 1, 2))
+    return jax.jit(_gather_core, static_argnames=statics)
+
+
+def gather_staged(staged: StagedJoin, probe: Relation, out_capacity: int,
+                  *, build_prefix: str = "",
+                  probe_prefix: str = "") -> Relation:
+    """Finish a staged materialize: one jitted dispatch, donated staged
+    buffers on backends that support donation (CPU does not)."""
+    donate = jax.default_backend() != "cpu"
+    return _gather_jit(donate)(
+        staged.sorted_build, staged.lo, staged.cnt, probe,
+        out_capacity=out_capacity, build_prefix=build_prefix,
+        probe_prefix=probe_prefix)
 
 
 # --------------------------------------------------------------------------

@@ -66,10 +66,18 @@ def default_plan(n_r: int, n_s: int, n_t: int, *, m_budget: int,
 
 def cyclic3_count(r: Relation, s: Relation, t: Relation,
                   plan: Cyclic3Plan, *, use_kernel: bool = False,
+                  pair_index: bool = True,
                   ra: str = "a", rb: str = "b", sb: str = "b", sc: str = "c",
                   tc: str = "c", ta: str = "a") -> Cyclic3Result:
+    """Scan-driver triangle count.  ``pair_index`` (default on) lex-sorts
+    each T bucket row into a (c, a)-pair index ONCE after partitioning and
+    probes it with searchsorted range scans per cell — the same trick the
+    fused path defaults to — instead of the all-pairs compare kernel.
+    ``use_kernel=True`` keeps the all-pairs Pallas kernel (the pair index
+    has no SIMD realization)."""
     hp, gp, uh, ug, fp = (plan.h_parts, plan.g_parts, plan.uh, plan.ug,
                           plan.f_parts)
+    pairidx = pair_index and not use_kernel
 
     # Fig 3 data reorganization.
     r_ids, r_nb = partition.composite_ids(
@@ -82,6 +90,15 @@ def cyclic3_count(r: Relation, s: Relation, t: Relation,
     t_ids, t_nb = partition.composite_ids(
         t, [(ta, hp, "H"), (tc, fp, "f"), (ta, uh, "h")])
     tg = partition.bucketize_by_ids(t, t_ids, t_nb, plan.t_cap, (hp, fp, uh))
+
+    if pairidx:
+        # build the sorted (c, a)-pair index once per partitioning; the
+        # validity plane is baked into the sentinels, so the scan below
+        # carries it only to keep one code shape for both paths
+        t_c_all, t_a_all = kops.sorted_pair_index(
+            tg.columns[tc], tg.columns[ta], tg.valid)
+    else:
+        t_c_all, t_a_all = tg.columns[tc], tg.columns[ta]
 
     def hg_cell(r_a, r_b, r_v, s_b, s_c, s_v, t_c, t_a, t_v):
         """Join one (H(A)=i, G(B)=j) partition triple on the uh×ug grid,
@@ -100,10 +117,16 @@ def cyclic3_count(r: Relation, s: Relation, t: Relation,
             def flat(x):
                 return x.reshape((uh * ug,) + x.shape[2:])
 
-            c = kops.bucket_count3_cyclic(
-                flat(r_a), flat(r_b), flat(r_v),
-                flat(sbb), flat(scb), flat(svb),
-                flat(tcb), flat(tab), flat(tvb), use_kernel=use_kernel)
+            if pairidx:
+                c = kops.bucket_count3_cyclic_pairidx(
+                    flat(r_a), flat(r_b), flat(r_v),
+                    flat(sbb), flat(scb), flat(svb),
+                    flat(tcb), flat(tab))
+            else:
+                c = kops.bucket_count3_cyclic(
+                    flat(r_a), flat(r_b), flat(r_v),
+                    flat(sbb), flat(scb), flat(svb),
+                    flat(tcb), flat(tab), flat(tvb), use_kernel=use_kernel)
             return acc + jnp.sum(c), None
 
         acc, _ = jax.lax.scan(f_step, jnp.int32(0),
@@ -126,7 +149,7 @@ def cyclic3_count(r: Relation, s: Relation, t: Relation,
     total, _ = jax.lax.scan(
         h_step, jnp.int32(0),
         (rg.columns[ra], rg.columns[rb], rg.valid,
-         tg.columns[tc], tg.columns[ta], tg.valid))
+         t_c_all, t_a_all, tg.valid))
 
     overflow = rg.overflowed | sg.overflowed | tg.overflowed
     tuples = r.n + hp * s.n + gp * t.n

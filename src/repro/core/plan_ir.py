@@ -17,12 +17,19 @@ triangle query):
     ``%i<k>``); intermediate schemas (``project``) and plan-time
     cardinality estimates (``est_rows``/``est_out``) flow between steps;
     the root step writes :data:`COUNT`.
-  * :func:`execute_plan` — the ONE executor.  It walks the DAG,
-    materializes intermediates exactly (capacities sized from exact
-    host-side key histograms, so a materialize step *cannot* overflow),
-    threads ``base_salt``/``max_rounds``/``growth`` through every fused
-    step, and aggregates count / tuples_read / recovery rounds across
-    steps into a single result.
+  * :func:`execute_plan` — the ONE executor, device-resident end to end.
+    Each binary materialize step runs as a compiled two-dispatch pipeline
+    (``binary_join.stage_join`` → ``gather_staged``) whose only host↔
+    device traffic is the two-scalar exact total that sizes the output
+    buffer (log-bucketed static capacities, so refreshed executions hit
+    the same compiled gather).  Steps overlap: before the executor blocks
+    on a step's total it dispatches stage 1 of every later binary step
+    whose inputs are already live (independent DAG branches run
+    concurrently under JAX async dispatch), and a refcounting buffer
+    arena drops each ``%i<k>`` intermediate the moment its last consumer
+    has captured it.  ``base_salt``/``max_rounds``/``growth`` thread
+    through every fused step; count / tuples_read / recovery rounds /
+    per-step timings aggregate into a single result.
 
 ``planner.plan_query`` is the decomposer that produces these plans;
 ``session.JoinSession.execute`` walks them.  The legacy
@@ -36,18 +43,15 @@ import dataclasses
 import time
 from typing import Mapping, NamedTuple
 
+import jax
 import numpy as np
 
-from repro.core import binary_join, engine
+from repro.core import binary_join, engine, recovery
 from repro.core.query import Predicate
 from repro.core.relation import Relation
 
 # The root step's output name: the aggregated COUNT of the whole query.
 COUNT = "%count"
-
-
-def _align8(n: int) -> int:
-    return max(8, ((int(n) + 7) // 8) * 8)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,12 +86,19 @@ class PlanStep:
     choice: object | None = None         # planner.TimedChoice, if one ran
     est_rows: tuple[int, ...] = ()       # plan-time input-card estimates
     est_out: int | None = None           # plan-time output-rows estimate
+    # fused3 root only: per-R group counts requested, keyed by this column
+    # of the role-r input — the executor answers through the recovery
+    # engine's per-R rounds and surfaces PlanExecResult.per_r
+    per_r_key: str | None = None
 
     def describe(self) -> str:
         if self.op == "fused3":
             ins = ", ".join(self.inputs)
+            per_r = (f", per_r[{self.per_r_key}]" if self.per_r_key
+                     else "")
             return (f"{self.out} <- fused3[{self.kind}"
-                    f"{', recovery' if self.recovery else ''}]({ins})")
+                    f"{', recovery' if self.recovery else ''}{per_r}]"
+                    f"({ins})")
         (p,) = self.preds
         verb = "count" if self.aggregate else "join"
         est = "" if self.est_out is None else f"  [~{self.est_out} rows]"
@@ -127,7 +138,16 @@ class QueryPlan:
 
 
 class StepStats(NamedTuple):
-    """Per-step execution record (aggregated onto the QueryResult)."""
+    """Per-step execution record (aggregated onto the QueryResult).
+
+    ``exec_s`` is the host time the executor's loop spent on the step —
+    under async dispatch that is mostly the blocking two-scalar total
+    sync, NOT the device work.  ``dispatch_s`` is the slice of it spent
+    enqueueing the step's compiled calls (stage + gather).  ``wall_s`` is
+    the step's start-to-buffers-ready wall time and is only populated
+    when ``execute_plan(..., profile=True)`` blocks per step — it is 0.0
+    on the overlapped default path, where per-step wall time is not a
+    well-defined quantity."""
 
     op: str
     out: str
@@ -135,6 +155,8 @@ class StepStats(NamedTuple):
     rounds: int              # recovery rounds (0 for binary steps)
     tuples_read: int
     exec_s: float
+    dispatch_s: float = 0.0  # host time enqueueing compiled calls
+    wall_s: float = 0.0      # blocked wall time (profile=True only)
 
 
 class PlanExecResult(NamedTuple):
@@ -143,6 +165,7 @@ class PlanExecResult(NamedTuple):
     tuples_read: int         # summed over steps (intermediates counted as
     rounds: int              # written once + read once, like §6.3)
     step_stats: tuple
+    per_r: recovery.PerRResult | None = None  # root per-R group counts
 
 
 def _step_keys(step: PlanStep) -> tuple[str, str]:
@@ -160,31 +183,37 @@ def _project(rel: Relation, mapping) -> Relation:
                     rel.valid)
 
 
-def _materialize(step: PlanStep, env) -> tuple[Relation, int, int]:
-    """Execute a binary materialize step: exact-size the intermediate from
-    host-side key histograms (it cannot overflow), then expand."""
+class _Staged(NamedTuple):
+    """A binary step whose stage-1 pipeline (sort + ranges + exact total)
+    has been dispatched.  The inputs are captured here — once every
+    consumer of an intermediate holds its capture, the arena drops the
+    intermediate from the environment."""
+
+    staged: binary_join.StagedJoin
+    probe: Relation            # projected probe side (stage 2 reads it)
+    na: object                 # device scalars: live input cardinalities
+    nb: object                 # (synced with the total, not eagerly)
+    dispatch_s: float
+
+
+def _stage_binary(step: PlanStep, env) -> _Staged:
+    """Dispatch stage 1 of a binary step (one compiled call, async)."""
     a, b = env[step.inputs[0]], env[step.inputs[1]]
     proj_a, proj_b = step.project if step.project else ((), ())
     a2, b2 = _project(a, proj_a), _project(b, proj_b)
     ka, kb = _step_keys(step)
-    total = binary_join.exact_join_count(a2, ka, b2, kb)
-    if total >= 2**31:
-        raise ValueError(
-            f"intermediate {step.out} has {total} rows — too large to "
-            "materialize; re-plan with strategy='3way' (the fused 3-way "
-            "engine never materializes the join output)")
-    jres = binary_join.join_materialize(a2, ka, b2, kb,
-                                        _align8(max(64, total + 8)))
-    assert not bool(jres.overflowed)      # exact-sized above
-    tuples = int(a.n) + int(b.n) + total  # read both inputs, write I once
-    return jres.rel, total, tuples
+    t0 = time.perf_counter()
+    st = binary_join.stage_join(a2, b2, build_key=ka, probe_key=kb)
+    return _Staged(st, b2, a.n, b.n, time.perf_counter() - t0)
 
 
-def _run_fused3(step: PlanStep, plan: QueryPlan, env) -> engine.EngineResult:
+def _run_fused3(step: PlanStep, plan: QueryPlan, env):
     """Execute a fused 3-way step through the recovery-wrapped engine.
     ``shape_plan is None`` sizes the partition shape here, from the LIVE
     input cardinalities (the inputs may be just-materialized
-    intermediates whose sizes no plan-time estimate pinned down)."""
+    intermediates whose sizes no plan-time estimate pinned down).  A
+    ``per_r_key`` stamp routes the step through the per-R recovery
+    rounds instead of the scalar count — returns a PerRResult then."""
     rels = {role: env[name] for role, name in step.roles}
     r, s, t = rels["r"], rels["s"], rels["t"]
     eng = engine.MultiwayJoinEngine(
@@ -194,55 +223,137 @@ def _run_fused3(step: PlanStep, plan: QueryPlan, env) -> engine.EngineResult:
     if shape is None:
         shape = eng.default_plan(int(r.n), int(s.n), int(t.n),
                                  m_budget=plan.m_budget)
+    if step.per_r_key is not None:
+        if step.kind != "linear":
+            raise ValueError("per-R fused steps must be linear; planner "
+                             f"emitted kind {step.kind!r}")
+        return recovery.run_per_r_rounds(
+            recovery.LinearOps(**dict(step.cols)), r, s, t, shape,
+            max_rounds=plan.max_rounds, growth=plan.growth,
+            use_kernel=plan.use_kernel, base_salt=plan.base_salt,
+            key_col=step.per_r_key)
     return eng.count(r, s, t, shape, **dict(step.cols))
 
 
-def execute_plan(plan: QueryPlan,
-                 relations: Mapping[str, Relation]) -> PlanExecResult:
+def execute_plan(plan: QueryPlan, relations: Mapping[str, Relation], *,
+                 profile: bool = False) -> PlanExecResult:
     """Walk the DAG: materialize intermediates, aggregate at the root.
 
+    Device-resident and overlapped: every binary step is two compiled
+    dispatches (stage: sort + match ranges + exact two-limb total;
+    gather: prefix-sum offsets + materialize into a log-bucketed static
+    capacity), and before blocking on a step's two-scalar total the
+    executor dispatches stage 1 of every later binary step whose inputs
+    are already live — independent DAG branches overlap under JAX async
+    dispatch, and the fused root's recovery rounds queue behind
+    still-in-flight gathers instead of waiting for them.  A refcounting
+    arena drops each ``%i<k>`` intermediate from the environment as soon
+    as its last consumer has captured it, so donated gather buffers can
+    be reused.
+
     ``overflowed == False`` is a postcondition of the whole walk: binary
-    materialize steps are exact-sized host-side, binary aggregates are
-    exact int64 host histograms, and fused steps inherit the recovery
-    engine's exact-histogram final round.
+    materialize steps are exact-sized on device (the gather capacity
+    covers the exact total), binary aggregates are exact two-limb int64
+    sums, and fused steps inherit the recovery engine's exact-histogram
+    final round.
+
+    ``profile=True`` blocks on each step's output buffers and fills
+    ``StepStats.wall_s`` — attribution mode for benches; it serializes
+    the overlap, so leave it off on the hot path.
     """
+    steps = plan.steps
     env: dict[str, Relation] = dict(relations)
+    # arena refcounts: consumers left per environment name (base relations
+    # are caller-owned and never dropped; every %i<k> is dropped at zero)
+    readers: dict[str, int] = {}
+    for s in steps:
+        for n in s.inputs:
+            readers[n] = readers.get(n, 0) + 1
+
+    def release(name: str) -> None:
+        readers[name] -= 1
+        if readers[name] == 0 and name.startswith("%"):
+            env.pop(name, None)
+
+    staged: dict[int, _Staged] = {}
+
+    def stage_ready(start: int) -> None:
+        # dispatch stage 1 of every not-yet-staged later binary step whose
+        # inputs are live — this is the overlap: it runs BEFORE the
+        # executor blocks on the current step's total
+        for j in range(start, len(steps)):
+            s = steps[j]
+            if (j not in staged and s.op == "binary"
+                    and all(n in env for n in s.inputs)):
+                staged[j] = _stage_binary(s, env)
+                for n in s.inputs:
+                    release(n)
+
     total_tuples = 0
     rounds = 0
     count = 0
+    per_r = None
     stats: list[StepStats] = []
-    for step in plan.steps:
+    for i, step in enumerate(steps):
         t0 = time.perf_counter()
-        if step.op == "binary" and not step.aggregate:
-            rel, rows, tuples = _materialize(step, env)
-            env[step.out] = rel
+        if step.op == "binary":
+            stage_ready(i)
+            sg = staged.pop(i)
+            dispatch_s = sg.dispatch_s
+            total = binary_join.staged_total(sg.staged)  # sync: 2 scalars
+            tuples = int(sg.na) + int(sg.nb)
+            if step.aggregate:
+                count = total
+                out = None
+            else:
+                if total >= 2**31:
+                    raise ValueError(
+                        f"intermediate {step.out} has {total} rows — too "
+                        "large to materialize; re-plan with "
+                        "strategy='3way' (the fused 3-way engine never "
+                        "materializes the join output)")
+                cap = binary_join.bucket_capacity(total)
+                t_d = time.perf_counter()
+                out = binary_join.gather_staged(sg.staged, sg.probe, cap)
+                dispatch_s += time.perf_counter() - t_d
+                env[step.out] = out
+                tuples += total               # intermediate written once
+                # producing %i<k> may unblock dependent steps: overlap
+                # their stage 1 with this gather already in flight
+                stage_ready(i + 1)
+            if profile and out is not None:
+                jax.block_until_ready(out)
+            rows = count if step.aggregate else total
             total_tuples += tuples
-            stats.append(StepStats("binary", step.out, rows, 0, tuples,
-                                   time.perf_counter() - t0))
-        elif step.op == "binary":
-            a, b = env[step.inputs[0]], env[step.inputs[1]]
-            ka, kb = _step_keys(step)
-            count = binary_join.exact_join_count(a, ka, b, kb)
-            tuples = int(a.n) + int(b.n)
-            total_tuples += tuples
-            stats.append(StepStats("binary", step.out, count, 0, tuples,
-                                   time.perf_counter() - t0))
+            stats.append(StepStats(
+                "binary", step.out, rows, 0, tuples,
+                time.perf_counter() - t0, dispatch_s,
+                (time.perf_counter() - t0) if profile else 0.0))
         elif step.op == "fused3":
             if not step.aggregate:
                 raise ValueError(
                     "fused3 steps aggregate (the engine never materializes "
                     f"its output); step {step.out!r} tries to materialize")
             res = _run_fused3(step, plan, env)
-            count = int(res.count)
+            for n in step.inputs:
+                release(n)
+            if step.per_r_key is not None:
+                per_r = res
+                count = int(np.asarray(res.counts)[
+                    np.asarray(res.valid)].sum())
+            else:
+                count = int(res.count)
             total_tuples += int(res.tuples_read)
             rounds += int(res.rounds)
-            stats.append(StepStats("fused3", step.out, count,
-                                   int(res.rounds), int(res.tuples_read),
-                                   time.perf_counter() - t0))
+            stats.append(StepStats(
+                "fused3", step.out, count, int(res.rounds),
+                int(res.tuples_read), time.perf_counter() - t0, 0.0,
+                (time.perf_counter() - t0) if profile else 0.0))
         else:
             raise ValueError(f"unknown plan-step op {step.op!r}")
-    return PlanExecResult(int(count), False, int(total_tuples),
-                          max(rounds, 1), tuple(stats))
+    overflowed = bool(per_r.overflowed) if per_r is not None else False
+    return PlanExecResult(int(count), overflowed, int(total_tuples),
+                          max(rounds, 1), tuple(stats), per_r)
 
 
 def result_as_engine(res: PlanExecResult) -> engine.EngineResult:

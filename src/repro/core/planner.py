@@ -28,8 +28,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
 from repro.core import binary_join, cyclic3, engine, linear3, plan_ir, star3
 from repro.core.cost_model import (  # noqa: F401  (traffic layer)
     PlanChoice, cascaded_binary_tuples, choose_cyclic_strategy,
@@ -37,40 +35,51 @@ from repro.core.cost_model import (  # noqa: F401  (traffic layer)
 from repro.core.query import (STAR_FACT_RATIO, Classification, Predicate,
                               Query, QueryGraphError)
 from repro.core.relation import Relation
-from repro.perfmodel import (HW, PLASTICINE, binary_cascade_time,
-                             linear3_time, star3_binary_time, star3_time)
+from repro.perfmodel import (HW, PLASTICINE, Calibration,
+                             binary_cascade_time, linear3_time,
+                             star3_binary_time, star3_time)
 
 
 @dataclasses.dataclass(frozen=True)
 class TimedChoice:
     strategy: str            # "3way" | "cascade"
-    t_3way_s: float
+    t_3way_s: float          # calibrated when a Calibration was applied
     t_cascade_s: float
     speedup: float           # cascade / 3way (>1 favors the 3-way)
     bottleneck_3way: str
     bottleneck_cascade: str
+    calibration: str = "identity"   # Calibration.source that scaled this
+
+
+def _timed(t3, tc, cal: Calibration | None) -> TimedChoice:
+    """Compare two Breakdowns, optionally re-anchored by measured bench
+    constants (``perfmodel.calibrate``) — the decision uses the CALIBRATED
+    totals, and the choice records which calibration spoke."""
+    t3s, tcs = t3.total, tc.total
+    src = "identity"
+    if cal is not None:
+        t3s, tcs = cal.scaled(t3s, tcs)
+        src = cal.source
+    return TimedChoice("3way" if t3s < tcs else "cascade",
+                       t3s, tcs, tcs / t3s,
+                       t3.bottleneck, tc.bottleneck, calibration=src)
 
 
 def choose_linear_timed(n_r: float, n_s: float, n_t: float, d: float,
-                        hw: HW = PLASTICINE) -> TimedChoice:
+                        hw: HW = PLASTICINE, *,
+                        calibration: Calibration | None = None
+                        ) -> TimedChoice:
     """Self/linear 3-way vs cascade on a hardware profile (Fig 4 e/f)."""
-    t3 = linear3_time(n_r, n_s, n_t, d, hw)
-    tc = binary_cascade_time(n_r, n_s, n_t, d, hw)
-    return TimedChoice(
-        "3way" if t3.total < tc.total else "cascade",
-        t3.total, tc.total, tc.total / t3.total,
-        t3.bottleneck, tc.bottleneck)
+    return _timed(linear3_time(n_r, n_s, n_t, d, hw),
+                  binary_cascade_time(n_r, n_s, n_t, d, hw), calibration)
 
 
 def choose_star_timed(n_r: float, n_s: float, n_t: float, d: float,
-                      hw: HW = PLASTICINE) -> TimedChoice:
+                      hw: HW = PLASTICINE, *,
+                      calibration: Calibration | None = None) -> TimedChoice:
     """Star 3-way vs cascade (Fig 4 g/h/i)."""
-    t3 = star3_time(n_r, n_s, n_t, d, hw)
-    tc = star3_binary_time(n_r, n_s, n_t, d, hw)
-    return TimedChoice(
-        "3way" if t3.total < tc.total else "cascade",
-        t3.total, tc.total, tc.total / t3.total,
-        t3.bottleneck, tc.bottleneck)
+    return _timed(star3_time(n_r, n_s, n_t, d, hw),
+                  star3_binary_time(n_r, n_s, n_t, d, hw), calibration)
 
 
 # --------------------------------------------------------------------------
@@ -153,6 +162,7 @@ def plan_step(kind: str, n_r: int, n_s: int, n_t: int, d: float, *,
               m_budget: int | None = None, hw: HW = PLASTICINE,
               use_kernel: bool = False, max_rounds: int = 3,
               growth: float = 2.0, base_salt: int = 0,
+              calibration: Calibration | None = None,
               **plan_kw) -> EnginePlan:
     """Size one 3-relation shape plan from the paper's partitioning rules
     AND pick its 3-way vs cascade strategy from the Appendix-A time model
@@ -162,7 +172,8 @@ def plan_step(kind: str, n_r: int, n_s: int, n_t: int, d: float, *,
         raise ValueError(f"{kind} plans need m_budget (on-chip partition "
                          "size in tuples)")
     if kind == "linear":
-        choice = choose_linear_timed(n_r, n_s, n_t, d, hw)
+        choice = choose_linear_timed(n_r, n_s, n_t, d, hw,
+                                     calibration=calibration)
         shape = linear3.default_plan(n_r, n_s, n_t, m_budget=m_budget,
                                      **plan_kw)
     elif kind == "cyclic":
@@ -172,7 +183,8 @@ def plan_step(kind: str, n_r: int, n_s: int, n_t: int, d: float, *,
         shape = cyclic3.default_plan(n_r, n_s, n_t, m_budget=m_budget,
                                      **plan_kw)
     elif kind == "star":
-        choice = choose_star_timed(n_r, n_s, n_t, d, hw)
+        choice = choose_star_timed(n_r, n_s, n_t, d, hw,
+                                   calibration=calibration)
         shape = star3.default_plan(n_r, n_s, n_t, **plan_kw)
     else:
         raise ValueError(f"unknown kind {kind!r}")
@@ -187,17 +199,17 @@ def plan_step(kind: str, n_r: int, n_s: int, n_t: int, d: float, *,
 # --------------------------------------------------------------------------
 
 def _distinct_est(rel: Relation, col: str) -> int:
-    """Host-side exact distinct count of a join column (the plan-time
-    seed for Swami–Schiefer estimates; FM sketches are the scale-out
-    replacement once relations stop fitting host passes)."""
-    v = np.asarray(rel.columns[col])
-    valid = np.asarray(rel.valid)
-    return max(1, int(np.unique(v[valid]).size)) if valid.any() else 1
+    """FM-sketch distinct estimate of a join column (the plan-time seed
+    for Swami–Schiefer estimates).  Device-side: the sketch is built once
+    per (relation, column) and cached on the Relation, so planning never
+    runs a host ``np.unique`` pass over the data."""
+    return rel.distinct_estimate(col)
 
 
 def estimate_d(binding) -> int:
     """Distinct-value estimate for the time model: the hub relation's
-    R-side join column (one host pass, amortized by the plan cache)."""
+    R-side join column (one sketch build, amortized by the plan cache
+    and the Relation's own sketch cache)."""
     return _distinct_est(binding.rels["s"], binding.col_kwargs()["sb"])
 
 
@@ -220,8 +232,44 @@ def _cascade3_steps(role_names, colmap) -> tuple:
     return (step1, step2)
 
 
-def _single_fused_plan(query: Query, cls_: Classification,
-                       ep: EnginePlan) -> plan_ir.QueryPlan:
+def _swap_linear_rt(cls_: Classification) -> Classification:
+    """Swap the r/t endpoint roles of a linear classification (the path
+    is symmetric, so this is free) — used to land a pinned per-R
+    relation on role r, where the recovery engine's per-R rounds live."""
+    cm, rm = cls_.col_map, cls_.role_map
+    return Classification(
+        kind=cls_.kind, shape=cls_.shape,
+        roles=(("r", rm["t"]), ("s", rm["s"]), ("t", rm["r"])),
+        cols=(("rb", cm["tc"]), ("sb", cm["sc"]),
+              ("sc", cm["sb"]), ("tc", cm["rb"])))
+
+
+def pin_per_r_classification(cls_: Classification,
+                             per_r_name: str) -> Classification:
+    """Validate + adjust a 3-relation classification so a pinned per-R
+    relation lands on engine role r, where the recovery engine's per-R
+    rounds live.  Star relaxes to the linear layout (per-R rounds are
+    linear-engine ops, and every star is also a valid path); cyclic and
+    centre pins are errors."""
+    if cls_.kind == "cyclic":
+        raise ValueError(
+            "per-R counts are defined for linear (path) queries; this "
+            "query classified as 'cyclic'")
+    if cls_.kind == "star":
+        cls_ = Classification(kind="linear", shape=cls_.shape,
+                              roles=cls_.roles, cols=cls_.cols)
+    role_map = cls_.role_map
+    if per_r_name == role_map["s"]:
+        raise ValueError(
+            f"per-R relation {per_r_name!r} is the path centre; per-R "
+            "counts group by a path endpoint")
+    if per_r_name == role_map["t"]:
+        cls_ = _swap_linear_rt(cls_)
+    return cls_
+
+
+def _single_fused_plan(query: Query, cls_: Classification, ep: EnginePlan,
+                       per_r_key: str | None = None) -> plan_ir.QueryPlan:
     """Wrap a sized 3-relation EnginePlan as a one-step QueryPlan (the
     path every 3-relation fused query takes — plan-cache compatible)."""
     role_map = dict(cls_.roles)
@@ -229,7 +277,8 @@ def _single_fused_plan(query: Query, cls_: Classification,
         op="fused3", out=plan_ir.COUNT,
         inputs=tuple(role_map[r] for r in ("r", "s", "t")),
         preds=(), aggregate=True, kind=cls_.kind, roles=cls_.roles,
-        cols=cls_.cols, shape_plan=ep.shape_plan, choice=ep.choice)
+        cols=cls_.cols, shape_plan=ep.shape_plan, choice=ep.choice,
+        per_r_key=per_r_key)
     return plan_ir.QueryPlan(
         steps=(step,), n_relations=len(query.relations), kind=cls_.kind,
         strategy="3way", m_budget=ep.m_budget, use_kernel=ep.use_kernel,
@@ -322,6 +371,8 @@ def plan_query(query: Query, cards=None, *, m_budget: int | None = None,
                star_fact_ratio: float | None = None,
                strategy: str | None = None,
                classification: Classification | None = None,
+               calibration: Calibration | None = None,
+               per_r_name: str | None = None, per_r_key: str = "a",
                **plan_kw) -> plan_ir.QueryPlan:
     """Decompose a declarative Query into an executable multi-step plan.
 
@@ -337,6 +388,17 @@ def plan_query(query: Query, cards=None, *, m_budget: int | None = None,
     ``strategy``: ``None`` lets the Appendix-A time model decide per
     root; ``"3way"`` forces the fused engine at the root; ``"cascade"``
     forces all-binary.  ``cards`` overrides the live cardinalities.
+    ``calibration`` re-anchors the time model's constants from measured
+    bench data (``perfmodel.calibrate``); ``None`` keeps the hand-set
+    Appendix-A constants.
+
+    ``per_r_name`` pins one relation for per-key group counts: the plan
+    gets a fused linear root with that relation in role r and the
+    declarative ``per_r_key`` stamped on the root step, which the
+    executor answers via the recovery engine's per-R rounds.  The pinned
+    relation must be a path endpoint (3 relations) or a leaf of the
+    predicate tree (N ≥ 4) — its join edge is excluded from contraction
+    so it survives to the root.
     """
     if isinstance(query, str):
         raise TypeError(
@@ -352,6 +414,22 @@ def plan_query(query: Query, cards=None, *, m_budget: int | None = None,
     rels = query.relations
     names = list(rels)
     n = len(names)
+    if per_r_name is not None:
+        if per_r_name not in rels:
+            raise ValueError(f"per-R relation {per_r_name!r} is not one of "
+                             f"the query's relations {sorted(rels)}")
+        if per_r_key not in rels[per_r_name].columns:
+            raise ValueError(f"per-R key column {per_r_key!r} is not a "
+                             f"column of relation {per_r_name!r}")
+        if strategy == "cascade":
+            raise ValueError("per-R counts need the fused multiway root "
+                             "(recovery per-R rounds); they have no "
+                             "binary-cascade form")
+        if n == 2:
+            raise ValueError("per-R counts need a fused 3-way root; a "
+                             "2-relation query has none")
+        # the fused root IS the per-R implementation — pin it
+        strategy = "3way"
     if cards is None:
         cards = {nm: int(rel.n) for nm, rel in rels.items()}
     edges = query.edges()
@@ -391,6 +469,8 @@ def plan_query(query: Query, cards=None, *, m_budget: int | None = None,
     if n == 3:
         cls_ = classification or query.classify(cards,
                                                 star_fact_ratio=ratio)
+        if per_r_name is not None:
+            cls_ = pin_per_r_classification(cls_, per_r_name)
         role_map = dict(cls_.roles)
         n_r, n_s, n_t = (cards[role_map[k]] for k in ("r", "s", "t"))
         if strategy == "cascade":
@@ -409,9 +489,11 @@ def plan_query(query: Query, cards=None, *, m_budget: int | None = None,
         else:
             ep = plan_step(cls_.kind, n_r, n_s, n_t,
                            estimate_d(query.bind(cls_)), hw=hw,
-                           **cfg, **plan_kw)
+                           calibration=calibration, **cfg, **plan_kw)
         if ep.strategy == "3way":
-            return _single_fused_plan(query, cls_, ep)
+            return _single_fused_plan(query, cls_, ep,
+                                      per_r_key=(per_r_key if per_r_name
+                                                 else None))
         return plan_ir.QueryPlan(
             steps=_cascade3_steps(role_map, dict(cls_.cols)),
             n_relations=3, kind=cls_.kind, strategy="cascade", **cfg)
@@ -426,6 +508,12 @@ def plan_query(query: Query, cards=None, *, m_budget: int | None = None,
             f"(the triangle query); this {n}-relation query has "
             f"{len(edges)} predicates — N-way queries must form a tree "
             "(connected and acyclic)")
+    if per_r_name is not None and len(adj[per_r_name]) != 1:
+        raise ValueError(
+            f"per-R relation {per_r_name!r} joins "
+            f"{len(adj[per_r_name])} relations; N-way per-R counts need "
+            "the pinned relation to be a leaf of the predicate tree (so "
+            "it can survive contraction to the fused root)")
 
     nodes: dict[str, _Node] = {}
     for i, nm in enumerate(names):
@@ -441,8 +529,11 @@ def plan_query(query: Query, cards=None, *, m_budget: int | None = None,
     steps: list = []
     k = 0
     while len(nodes) > 3:
-        e = min(enumerate(live),
-                key=lambda ie: (_edge_est(nodes, ie[1]), ie[0]))[1]
+        # a pinned per-R leaf's edge is never contracted, so the pinned
+        # relation survives to the 3-vertex frontier as an endpoint
+        cands = [ie for ie in enumerate(live)
+                 if per_r_name not in ie[1]["ends"]]
+        e = min(cands, key=lambda ie: (_edge_est(nodes, ie[1]), ie[0]))[1]
         _contract(nodes, live, e, steps, k)
         k += 1
 
@@ -452,10 +543,16 @@ def plan_query(query: Query, cards=None, *, m_budget: int | None = None,
     order = sorted(nodes.values(), key=lambda nd: nd.order)
     ends = [nd.name for nd in order if nd.name != centre]
     rn_, tn = ends[0], ends[1]
+    if per_r_name is not None and tn == per_r_name:
+        rn_, tn = tn, rn_     # per-R rounds live on role r
     e_rc = e1 if rn_ in e1["ends"] else e2
     e_ct = e2 if e_rc is e1 else e1
     n_r, n_s, n_t = nodes[rn_].card, nodes[centre].card, nodes[tn].card
     kind = "star" if n_s >= ratio * max(n_r, n_t, 1) else "linear"
+    if per_r_name is not None:
+        # per-R rounds are linear-engine ops; the linear root is correct
+        # for any path frontier (star is only a layout optimization)
+        kind = "linear"
     cols = (("rb", _node_key(nodes, rn_, e_rc["pred"])),
             ("sb", _node_key(nodes, centre, e_rc["pred"])),
             ("sc", _node_key(nodes, centre, e_ct["pred"])),
@@ -466,7 +563,7 @@ def plan_query(query: Query, cards=None, *, m_budget: int | None = None,
     if strategy is None:
         timed = (choose_star_timed if kind == "star"
                  else choose_linear_timed)
-        choice = timed(n_r, n_s, n_t, d_est, hw)
+        choice = timed(n_r, n_s, n_t, d_est, hw, calibration=calibration)
     else:
         choice = FORCED_3WAY_CHOICE if strategy == "3way" else None
     root_3way = (strategy == "3way"
@@ -486,7 +583,8 @@ def plan_query(query: Query, cards=None, *, m_budget: int | None = None,
             aggregate=True, kind=kind,
             roles=(("r", rn_), ("s", centre), ("t", tn)), cols=cols,
             shape_plan=None, choice=choice,
-            est_rows=(n_r, n_s, n_t)))
+            est_rows=(n_r, n_s, n_t),
+            per_r_key=(per_r_key if per_r_name else None)))
         label = "hybrid" if len(steps) > 1 else "3way"
     else:
         # all-binary tail: contract (R, centre), aggregate with T

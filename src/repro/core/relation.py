@@ -56,6 +56,35 @@ class Relation:
     def col(self, name: str) -> jnp.ndarray:
         return self.columns[name]
 
+    # -- distinct-count sketches ---------------------------------------------
+    def distinct_sketch(self, col: str) -> jnp.ndarray:
+        """The column's FM/PCSA register bitmaps (``core.sketches``),
+        built on first use and cached for the life of the instance (the
+        arrays are immutable, so the sketch can never go stale).  This is
+        what lets the planner estimate distinct counts without a host
+        scan; derived relations (``select``/``mask_where``/pytree
+        reconstruction) start with an empty cache."""
+        cache = self.__dict__.get("_sketch_cache")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_sketch_cache", cache)
+        sk = cache.get(col)
+        if sk is None:
+            from repro.core import sketches
+            sk = sketches.add(sketches.empty(), self.columns[col],
+                              self.valid)
+            cache[col] = sk
+        return sk
+
+    def distinct_estimate(self, col: str) -> int:
+        """FM-sketch distinct-count estimate of a column (>= 1), clipped
+        to the column's capacity.  The planner's scan-free replacement
+        for host ``np.unique`` passes."""
+        from repro.core import sketches
+        est = int(round(float(sketches.fm_estimate(
+            self.distinct_sketch(col)))))
+        return max(1, min(est, self.capacity))
+
     # -- construction --------------------------------------------------------
     @classmethod
     def from_arrays(cls, capacity: int | None = None, **cols) -> "Relation":

@@ -35,9 +35,9 @@ from typing import Any, Iterable
 
 import numpy as np
 
-from repro.core import engine, plan_ir, planner, recovery, sketches
+from repro.core import plan_ir, planner, recovery, sketches
 from repro.core.query import STAR_FACT_RATIO, Classification, Query
-from repro.perfmodel import HW, PLASTICINE
+from repro.perfmodel import HW, PLASTICINE, Calibration
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,13 +71,17 @@ class JoinSession:
     the recovery rounds of every fused step — a plan-level salt is never
     silently dropped), ``hw`` is the profile the 3-way vs cascade time
     decisions run on, and ``star_fact_ratio`` tunes the star/linear hub
-    disambiguation.
+    disambiguation.  ``calibration`` (``perfmodel.Calibration``, typically
+    ``calibration_from_bench("BENCH_engine.json")``) re-anchors the time
+    model's constants to measured per-root seconds on THIS machine; the
+    default ``None`` keeps the paper's hand-set constants.
     """
 
     def __init__(self, *, m_budget: int | None = None, hw: HW = PLASTICINE,
                  use_kernel: bool = False, max_rounds: int = 3,
                  growth: float = 2.0, base_salt: int = 0,
-                 star_fact_ratio: float | None = None):
+                 star_fact_ratio: float | None = None,
+                 calibration: Calibration | None = None):
         self.m_budget = m_budget
         self.hw = hw
         self.use_kernel = use_kernel
@@ -86,6 +90,7 @@ class JoinSession:
         self.base_salt = base_salt
         self.star_fact_ratio = (STAR_FACT_RATIO if star_fact_ratio is None
                                 else star_fact_ratio)
+        self.calibration = calibration
         self._plan_cache: dict[Any, plan_ir.QueryPlan] = {}
         self._hits = 0
         self._misses = 0
@@ -102,26 +107,33 @@ class JoinSession:
 
     def _cache_key(self, query: Query, cards: dict[str, int],
                    m_budget: int | None, strategy: str | None,
-                   forced: Classification | None):
+                   forced: Classification | None,
+                   per_r_name: str | None, per_r_key: str):
         # cardinalities enter the key LOG-BUCKETED (sketches.card_bucket):
         # plans are estimate-sized and recovery-correct, so a few percent
         # of data drift must not evict them — only scale changes re-plan
         buckets = tuple(sorted((name, sketches.card_bucket(n))
                                for name, n in cards.items()))
+        cal = self.calibration
         return (query.schema(), buckets, m_budget, self.hw,
                 self.use_kernel, strategy,
                 None if forced is None else (forced.kind, forced.roles,
-                                             forced.cols))
+                                             forced.cols),
+                None if per_r_name is None else (per_r_name, per_r_key),
+                None if cal is None else (cal.fused3_scale,
+                                          cal.cascade_scale))
 
     # -- planning ----------------------------------------------------------
 
     def _plan(self, query: Query, cards: dict[str, int],
               m_budget: int | None, strategy: str | None,
-              forced: Classification | None
+              forced: Classification | None,
+              per_r_name: str | None = None, per_r_key: str = "a"
               ) -> tuple[plan_ir.QueryPlan, bool]:
         """Decompose + size, through the plan cache.  A hit skips the
         graph analysis, the decomposition and the shape/strategy sizing."""
-        key = self._cache_key(query, cards, m_budget, strategy, forced)
+        key = self._cache_key(query, cards, m_budget, strategy, forced,
+                              per_r_name, per_r_key)
         hit = self._plan_cache.get(key)
         if hit is not None:
             self._hits += 1
@@ -132,14 +144,40 @@ class JoinSession:
             use_kernel=self.use_kernel, max_rounds=self.max_rounds,
             growth=self.growth, base_salt=self.base_salt,
             star_fact_ratio=self.star_fact_ratio, strategy=strategy,
-            classification=forced)
+            classification=forced, calibration=self.calibration,
+            per_r_name=per_r_name, per_r_key=per_r_key)
         self._plan_cache[key] = qp
         return qp, False
 
     # -- execution ---------------------------------------------------------
 
+    def _resolve_per_r(self, query: Query, cards: dict[str, int],
+                       per_r: bool | str) -> str | None:
+        """Turn the ``per_r`` argument into a pinned relation name:
+        ``False`` → ``None``; a string names the relation; ``True`` picks
+        the classified role-r endpoint (3 relations) or the first-declared
+        leaf of the predicate tree (N ≥ 4)."""
+        if not per_r:
+            return None
+        if isinstance(per_r, str):
+            return per_r
+        names = list(query.relations)
+        if len(names) == 3:
+            cls_ = query.classify(cards,
+                                  star_fact_ratio=self.star_fact_ratio)
+            return dict(cls_.roles)["r"]
+        degree = {nm: 0 for nm in names}
+        for key in query.edges():
+            for nm in key:
+                degree[nm] += 1
+        for nm in names:           # a tree always has >= 2 leaves
+            if degree[nm] == 1:
+                return nm
+        raise ValueError("per_r=True found no leaf relation; pin one by "
+                         "name (per_r='<relation>')")
+
     def execute(self, query: Query, *, m_budget: int | None = None,
-                per_r: bool = False, key_col: str = "a",
+                per_r: bool | str = False, key_col: str = "a",
                 plan=None, strategy: str | None = None,
                 classification: Classification | None = None) -> QueryResult:
         """Decompose (or reuse a cached plan), walk the DAG, recover.
@@ -150,6 +188,14 @@ class JoinSession:
         the root, ``"cascade"`` forces the all-binary cascade;
         ``classification`` bypasses 3-relation inference (the deprecation
         shims use it — new code should let the graph speak).
+
+        ``per_r`` requests per-key group counts: ``True`` groups by the
+        classified role-r endpoint (3 relations) or the first-declared
+        leaf (N ≥ 4); a string pins a specific relation.  The planner
+        routes the pinned relation to the fused linear root (its join
+        edge is never contracted away) and the executor answers through
+        the recovery engine's per-R rounds — ``QueryResult.per_r`` holds
+        the (keys, counts, valid) aggregate, ``count`` its valid sum.
         """
         if strategy not in (None, "3way", "cascade"):
             raise ValueError(f"unknown strategy {strategy!r}: pass None "
@@ -159,72 +205,35 @@ class JoinSession:
         t0 = time.perf_counter()
         m_budget = self.m_budget if m_budget is None else m_budget
         cards = {name: int(rel.n) for name, rel in query.relations.items()}
-        # the per-R aggregate is engine-only: plan its fused single step
-        eff_strategy = "3way" if (per_r and strategy is None) else strategy
+        per_r_name = self._resolve_per_r(query, cards, per_r)
         if plan is not None:
             cls_ = classification or query.classify(
                 cards, star_fact_ratio=self.star_fact_ratio)
+            if per_r_name is not None:
+                cls_ = planner.pin_per_r_classification(cls_, per_r_name)
             ep = planner.forced_3way_plan(
                 cls_.kind, plan, m_budget=m_budget,
                 use_kernel=self.use_kernel, max_rounds=self.max_rounds,
                 growth=self.growth, base_salt=self.base_salt)
-            qp = planner._single_fused_plan(query, cls_, ep)
+            qp = planner._single_fused_plan(
+                query, cls_, ep,
+                per_r_key=(key_col if per_r_name else None))
             cache_hit = False
         else:
-            qp, cache_hit = self._plan(query, cards, m_budget,
-                                       eff_strategy, classification)
+            qp, cache_hit = self._plan(query, cards, m_budget, strategy,
+                                       classification, per_r_name,
+                                       key_col)
         plan_s = time.perf_counter() - t0
 
         t1 = time.perf_counter()
-        if per_r:
-            return self._execute_per_r(query, qp, key_col, cache_hit,
-                                       plan_s, t1)
         res = plan_ir.execute_plan(qp, dict(query.relations))
         exec_s = time.perf_counter() - t1
         return QueryResult(
             count=np.int64(res.count), overflowed=bool(res.overflowed),
             tuples_read=np.int64(res.tuples_read), rounds=int(res.rounds),
             kind=qp.kind, strategy=qp.strategy, cache_hit=cache_hit,
-            plan_s=plan_s, exec_s=exec_s, plan=qp,
+            plan_s=plan_s, exec_s=exec_s, plan=qp, per_r=res.per_r,
             step_stats=res.step_stats)
-
-    def _execute_per_r(self, query: Query, qp: plan_ir.QueryPlan,
-                       key_col: str, cache_hit: bool, plan_s: float,
-                       t1: float) -> QueryResult:
-        # the per-R aggregate pass owns every output tuple exactly once,
-        # so COUNT is its valid-slot sum — one engine execution, not two
-        # (legacy engine_per_r_counts parity)
-        root = qp.root
-        if qp.n_relations != 3 or root.op != "fused3":
-            raise ValueError(
-                "per-R aggregates need a single-step fused linear plan; "
-                f"this {qp.n_relations}-relation query planned as "
-                f"{qp.strategy!r} (N-way per-R aggregates are a ROADMAP "
-                "follow-up)")
-        if root.kind != "linear":
-            raise ValueError(
-                f"per-R aggregates need a linear-classified query; "
-                f"this one classified as {root.kind!r}")
-        role_map = dict(root.roles)
-        r, s, t = (query.relations[role_map[k]] for k in ("r", "s", "t"))
-        shape = root.shape_plan
-        if shape is None:
-            shape = engine.MultiwayJoinEngine("linear").default_plan(
-                int(r.n), int(s.n), int(t.n), m_budget=qp.m_budget)
-        per_r_res = recovery.run_per_r_rounds(
-            recovery.LinearOps(**dict(root.cols)), r, s, t, shape,
-            max_rounds=qp.max_rounds, growth=qp.growth,
-            use_kernel=qp.use_kernel, base_salt=qp.base_salt,
-            key_col=key_col)
-        count = int(per_r_res.counts[np.asarray(per_r_res.valid)].sum())
-        exec_s = time.perf_counter() - t1
-        return QueryResult(
-            count=np.int64(count),
-            overflowed=bool(per_r_res.overflowed),
-            tuples_read=per_r_res.tuples_read,
-            rounds=int(per_r_res.rounds), kind=root.kind,
-            strategy="3way", cache_hit=cache_hit, plan_s=plan_s,
-            exec_s=exec_s, plan=qp, per_r=per_r_res)
 
     # -- batched execution -------------------------------------------------
 

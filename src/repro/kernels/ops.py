@@ -194,6 +194,31 @@ def lex_sort_pairs(tc, ta):
             jnp.take_along_axis(ta, order, axis=-1))
 
 
+def sorted_pair_index(tc, ta, tv):
+    """Build the sorted (c, a)-pair index for a grid of T bucket rows:
+    sentinel-mask invalid slots, then lex-sort each row by (c, then a).
+
+    tc/ta: [..., Ct] raw keys, tv: [..., Ct] validity.  Built ONCE per
+    partitioning and probed many times (``bucket_count3_cyclic_pairidx``)
+    — the public entry the scan driver's pair-index path uses.
+    """
+    return lex_sort_pairs(_mask(tc, tv, "t"), _mask(ta, tv, "t"))
+
+
+def bucket_count3_cyclic_pairidx(ra, rb, rv, sb, sc, sv, tcs, tas):
+    """Per-bucket triangle counts against a pre-built sorted pair index.
+
+    Same contract as ``bucket_count3_cyclic`` except the T side arrives
+    as ``sorted_pair_index`` output (already masked + lex-sorted, so no
+    validity argument): each S slot finds its T matches with two
+    ``searchsorted`` range probes and a prefix-sum table instead of the
+    all-pairs compare — O(Ct·Cr + Cs·Cr + Cs·log Ct) per bucket.
+    """
+    return _pairidx_cell_counts(_mask(ra, rv, "r"), _mask(rb, rv, "r"),
+                                _mask(sb, sv, "s"), _mask(sc, sv, "s"),
+                                tcs, tas)
+
+
 def _pairidx_cell_counts(ra, rb, sb, sc, tcs, tas):
     """Per-bucket triangle counts via the sorted (c, a)-pair index.
 
