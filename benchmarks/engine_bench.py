@@ -340,6 +340,55 @@ def bench_execute_many(rng, n, d, m_budget, batch, repeats):
                       and all(r.cache_hit for r in results[1:]))}
 
 
+def bench_streaming_ingest(rng, n, d, m_budget, delta_frac, deltas,
+                           repeats):
+    """Standing-query delta execution vs full re-execution at ingest.
+
+    A watched linear 3-way query absorbs delta batches (``delta_frac`` of
+    the base size, rotating over R/S/T) through the delta plan — resident
+    intermediates + family-masked siblings — while the oracle side
+    re-executes the whole query from scratch at the final state.  One
+    warm-up ingest per relation compiles the delta shapes and is excluded
+    from timing.  Gated on exact count match and the per-round
+    ``overflowed == False`` recovery contract."""
+    k = max(1, int(n * delta_frac))
+    rels = {"R": _rel(rng, n, ("a", "b"), d),
+            "S": _rel(rng, n, ("b", "c"), d),
+            "T": _rel(rng, n, ("c", "e"), d)}
+    schema = {"R": ("a", "b"), "S": ("b", "c"), "T": ("c", "e")}
+    q = Query(rels, [("R.b", "S.b"), ("S.c", "T.c")])
+    sq = JoinSession(m_budget=m_budget).watch(q)
+    names = list(rels)
+
+    def ingest(i):
+        name = names[i % 3]
+        batch = {c: rng.integers(0, d, k).astype(np.int32)
+                 for c in schema[name]}
+        t0 = time.perf_counter()
+        rels[name].append(batch)
+        return (time.perf_counter() - t0) * 1e3
+
+    for i in range(3):                      # warm-up: compile delta shapes
+        ingest(i)
+    delta_ms = min(ingest(3 + i) for i in range(deltas))
+    overflow_free = all(not r.overflowed for r in sq.delta_rounds)
+    standing = int(sq.snapshot().count)
+
+    oracle_sess = JoinSession(m_budget=m_budget)
+    full = oracle_sess.execute(q)           # compile + plan at final state
+    full_ms = float("inf")
+    for _ in range(max(repeats, 2)):
+        t0 = time.perf_counter()
+        full = oracle_sess.execute(q)
+        full_ms = min(full_ms, (time.perf_counter() - t0) * 1e3)
+    sq.close()
+    return {"n": n, "d": d, "delta_rows": k, "deltas": deltas,
+            "delta_ms": delta_ms, "full_ms": full_ms,
+            "speedup": full_ms / max(delta_ms, 1e-6),
+            "count": standing, "overflow_free": overflow_free,
+            "match": standing == int(full.count) and overflow_free}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -382,9 +431,18 @@ def main():
     shapes["session_execute_many"] = bench_execute_many(
         rng, n=12000 * scale, d=2048 * scale, m_budget=1024 * scale,
         batch=6, repeats=repeats)
+    # standing-query ingest: delta plans vs from-scratch re-execution
+    shapes["streaming_ingest"] = bench_streaming_ingest(
+        rng, n=24000 * scale, d=4096 * scale, m_budget=1024 * scale,
+        delta_frac=0.01, deltas=max(repeats * 2, 4), repeats=repeats)
 
     for name, row in shapes.items():
-        if "scan_ms" in row:
+        if "delta_ms" in row:
+            print(f"  {name}: delta {row['delta_ms']:.1f} ms "
+                  f"({row['delta_rows']} rows), full re-execute "
+                  f"{row['full_ms']:.1f} ms, speedup "
+                  f"{row['speedup']:.1f}x, match={row['match']}")
+        elif "scan_ms" in row:
             print(f"  {name}: scan {row['scan_ms']:.1f} ms, "
                   f"fused {row['fused_ms']:.1f} ms, "
                   f"speedup {row['speedup']:.2f}x, match={row['match']}")
@@ -403,7 +461,8 @@ def main():
                   f"warm plan {row['warm_plan_ms']:.3f} ms, "
                   f"cache hits={row['warm_cache_hits']}")
 
-    best = max(s["speedup"] for s in shapes.values() if "speedup" in s)
+    best = max(s["speedup"] for name, s in shapes.items()
+               if "speedup" in s and name != "streaming_ingest")
     cyc = shapes["cyclic_triangles"]["speedup"]
     cache = shapes["session_plan_cache"]
     ok = best >= 2.0 and all(s["match"] for s in shapes.values())
@@ -445,6 +504,17 @@ def main():
                       "plan with a fused 3-way root whose count equals "
                       "the all-binary cascade exactly, and execute_many "
                       "amortizes planning over the cache",
+        },
+        "claim_streaming_delta_ge_5x": {
+            "ok": bool(shapes["streaming_ingest"]["speedup"] >= 5.0
+                       and shapes["streaming_ingest"]["match"]),
+            "speedup": shapes["streaming_ingest"]["speedup"],
+            "overflow_free": shapes["streaming_ingest"]["overflow_free"],
+            "detail": "standing-query delta execution (resident "
+                      "intermediates + family-masked siblings) >= 5x "
+                      "faster than from-scratch re-execution at a 1% "
+                      "delta, exact counts, overflowed == False every "
+                      "delta round",
         },
         "claim_calibrated_plan_never_loses": {
             "ok": bool(shapes["cascade_4way"]["ir_vs_binary"] >= 1.0

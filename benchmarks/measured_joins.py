@@ -45,8 +45,8 @@ def main(results: dict | None = None):
         plan3 = linear3_default_plan(n, n, n, m_budget=max(n // 2, 512))
         # grow bucket capacities until nothing overflows (driver loop),
         # then time the final jitted plan
-        from repro.core import driver
-        res3, plan3 = driver.linear3_count_auto(r, s, t, plan3)
+        from repro.core import reference
+        res3, plan3 = reference.linear3_count_auto(r, s, t, plan3)
         icap = int(n * n / d * 2)          # |I| ≈ n²/d with 2x slack
         while bool(cascaded_binary_count(r, s, t, icap)
                    .intermediate_overflowed):
@@ -76,9 +76,9 @@ def main(results: dict | None = None):
     sc = np.asarray(s.col("c")); tcol = np.asarray(t.col("c"))
     exact = int(((rb[:, None] == sb[None, :]).sum(0).astype(np.int64)
                  * (sc[:, None] == tcol[None, :]).sum(1)).sum())
-    from repro.core import driver
+    from repro.core import reference
     plan3 = linear3_default_plan(n, n, n, m_budget=1024)
-    res, _ = driver.linear3_count_auto(r, s, t, plan3)
+    res, _ = reference.linear3_count_auto(r, s, t, plan3)
     got = int(res.count)
     claim(results, "measured_matches_bruteforce", got == exact,
           f"linear3 count {got} == numpy brute force {exact}")

@@ -6,6 +6,12 @@ Public API:
                              predicates in (cyclic at N = 3), decomposed +
                              planned + executed + skew-recovered
                              QueryResult out (plan-cached)
+  JoinResult               — the unified result core every entry point
+                             answers with (QueryResult / PerRResult /
+                             StandingQuery.snapshot all subclass/return it)
+  StandingQuery            — JoinSession.watch(query): exact incremental
+                             counts under Relation.append ingest (delta
+                             plan execution over resident intermediates)
   QueryPlan / PlanStep     — the multi-step plan IR: a DAG of fused 3-way
                              and binary join steps (planner.plan_query
                              decomposes, plan_ir.execute_plan walks)
@@ -20,7 +26,7 @@ Public API:
   cost_model               — the paper's tuple-traffic analysis
 """
 
-from repro.core import cost_model, hashing, partition, sketches  # noqa: F401
+from repro.core import cost_model, hashing, partition, reference, sketches  # noqa: F401
 from repro.core.binary_join import (  # noqa: F401
     bucketed_join_count, cascaded_binary_count, cascaded_binary_per_r_counts,
     join_count, join_materialize, probe_weight_sum)
@@ -37,6 +43,8 @@ from repro.core.query import (  # noqa: F401
     Binding, Classification, Query, QueryError, QueryGraphError,
     QuerySchemaError)
 from repro.core.relation import Relation  # noqa: F401
+from repro.core.results import JoinResult  # noqa: F401
 from repro.core.session import JoinSession, QueryResult  # noqa: F401
+from repro.core.streaming import DeltaRecord, StandingQuery  # noqa: F401
 from repro.core.star3 import Star3Plan, star3_count  # noqa: F401
 from repro.core.star3 import default_plan as star3_default_plan  # noqa: F401

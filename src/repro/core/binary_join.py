@@ -165,7 +165,7 @@ def probe_weight_sum(build: Relation, build_key: str, build_weights: jnp.ndarray
     return jnp.where(probe_valid, out, 0)
 
 
-class JoinResult(NamedTuple):
+class MaterializeResult(NamedTuple):
     rel: Relation            # materialized join, fixed capacity, masked
     total: jnp.ndarray       # true (unclipped) number of result tuples
     overflowed: jnp.ndarray  # () bool — result exceeded out_capacity
@@ -174,7 +174,7 @@ class JoinResult(NamedTuple):
 def join_materialize(build: Relation, build_key: str,
                      probe: Relation, probe_key: str,
                      out_capacity: int,
-                     build_prefix: str = "", probe_prefix: str = "") -> JoinResult:
+                     build_prefix: str = "", probe_prefix: str = "") -> MaterializeResult:
     """Materialize the equi-join into a fixed-capacity Relation.
 
     Used for the cascaded-binary intermediate I = R ⋈ S (paper §6.3): the
@@ -203,7 +203,7 @@ def join_materialize(build: Relation, build_key: str,
         if key in cols:  # join column appears once
             continue
         cols[key] = jnp.where(ok, col[owner], jnp.int32(-0x7FFFFFFF))
-    return JoinResult(Relation(cols, ok), total, total > out_capacity)
+    return MaterializeResult(Relation(cols, ok), total, total > out_capacity)
 
 
 # --------------------------------------------------------------------------

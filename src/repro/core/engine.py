@@ -14,8 +14,8 @@ spanning partitions rather than restarting per bucket row).
 Skew recovery (paper §5's skew discussion, made correct-by-construction)
 -----------------------------------------------------------------------
 Fixed-capacity buckets overflow under key skew.  The scan drivers only
-*flag* this; ``core.driver`` then re-runs the whole query with grown
-capacities.  The engine recovers surgically instead via the shared round
+*flag* this; the ``core.reference`` baselines re-run the whole query with
+grown capacities.  The engine recovers surgically instead via the shared round
 engine in ``core.recovery``: exact coarse partitions keep their fused
 partial counts, overflowed ones re-run with a salted hash and grown
 capacities, and the final round is exact-histogram-sized so it cannot

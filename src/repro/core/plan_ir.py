@@ -166,6 +166,10 @@ class PlanExecResult(NamedTuple):
     rounds: int              # written once + read once, like §6.3)
     step_stats: tuple
     per_r: recovery.PerRResult | None = None  # root per-R group counts
+    # keep_intermediates=True only: the materialized %i<k> Relations, kept
+    # resident instead of arena-dropped (standing queries refresh these
+    # incrementally on ingest)
+    intermediates: dict | None = None
 
 
 def _step_keys(step: PlanStep) -> tuple[str, str]:
@@ -236,7 +240,8 @@ def _run_fused3(step: PlanStep, plan: QueryPlan, env):
 
 
 def execute_plan(plan: QueryPlan, relations: Mapping[str, Relation], *,
-                 profile: bool = False) -> PlanExecResult:
+                 profile: bool = False,
+                 keep_intermediates: bool = False) -> PlanExecResult:
     """Walk the DAG: materialize intermediates, aggregate at the root.
 
     Device-resident and overlapped: every binary step is two compiled
@@ -260,6 +265,11 @@ def execute_plan(plan: QueryPlan, relations: Mapping[str, Relation], *,
     ``profile=True`` blocks on each step's output buffers and fills
     ``StepStats.wall_s`` — attribution mode for benches; it serializes
     the overlap, so leave it off on the hot path.
+
+    ``keep_intermediates=True`` disables the arena drop and returns every
+    materialized ``%i<k>`` on ``PlanExecResult.intermediates`` — the
+    standing-query path, which keeps them resident and refreshes them
+    incrementally on ingest instead of recomputing.
     """
     steps = plan.steps
     env: dict[str, Relation] = dict(relations)
@@ -272,7 +282,8 @@ def execute_plan(plan: QueryPlan, relations: Mapping[str, Relation], *,
 
     def release(name: str) -> None:
         readers[name] -= 1
-        if readers[name] == 0 and name.startswith("%"):
+        if (readers[name] == 0 and name.startswith("%")
+                and not keep_intermediates):
             env.pop(name, None)
 
     staged: dict[int, _Staged] = {}
@@ -339,10 +350,7 @@ def execute_plan(plan: QueryPlan, relations: Mapping[str, Relation], *,
                 release(n)
             if step.per_r_key is not None:
                 per_r = res
-                count = int(np.asarray(res.counts)[
-                    np.asarray(res.valid)].sum())
-            else:
-                count = int(res.count)
+            count = int(res.count)
             total_tuples += int(res.tuples_read)
             rounds += int(res.rounds)
             stats.append(StepStats(
@@ -352,8 +360,12 @@ def execute_plan(plan: QueryPlan, relations: Mapping[str, Relation], *,
         else:
             raise ValueError(f"unknown plan-step op {step.op!r}")
     overflowed = bool(per_r.overflowed) if per_r is not None else False
+    inter = None
+    if keep_intermediates:
+        inter = {s.out: env[s.out] for s in steps
+                 if s.op == "binary" and not s.aggregate and s.out in env}
     return PlanExecResult(int(count), overflowed, int(total_tuples),
-                          max(rounds, 1), tuple(stats), per_r)
+                          max(rounds, 1), tuple(stats), per_r, inter)
 
 
 def result_as_engine(res: PlanExecResult) -> engine.EngineResult:

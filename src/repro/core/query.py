@@ -18,8 +18,9 @@ graph-pattern systems plan from the join graph itself:
     the recovery KindOps and the sharded (mesh) path.
 
 `core.session.JoinSession` is the front door that takes a Query all the way
-to an exact, skew-recovered answer (with plan caching); the legacy entry
-points in `core.driver` are shims over this module.
+to an exact, skew-recovered answer (with plan caching); the retired legacy
+entry points (``driver.engine_count`` / ``engine_per_r_counts``) were shims
+over this module — see the README migration table.
 
 A Query is NOT limited to three relations: any connected acyclic
 equality-predicate hypergraph over N >= 2 named relations executes through

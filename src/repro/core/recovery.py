@@ -62,23 +62,12 @@ import numpy as np
 
 from repro.core import partition
 from repro.core.relation import Relation
+from repro.core.results import JoinResult, PerRResult  # noqa: F401 (re-export)
 from repro.kernels import ops as kops
 
-
-class EngineResult(NamedTuple):
-    count: np.int64              # exact join cardinality (int64: > 2^31 safe)
-    overflowed: jnp.ndarray      # () bool — False after successful recovery
-    tuples_read: np.int64        # tuples streamed, summed over rounds
-    rounds: int                  # recovery rounds executed (1 = no skew)
-
-
-class PerRResult(NamedTuple):
-    keys: jnp.ndarray            # [N] int32 carried key column (flattened)
-    counts: np.ndarray           # [N] int64 per-R-tuple counts
-    valid: jnp.ndarray           # [N] bool
-    overflowed: jnp.ndarray      # () bool
-    rounds: int
-    tuples_read: np.int64 = np.int64(0)   # tuples streamed, over rounds
+# Internal alias (see core.results): the recovery loop's scalar result IS
+# the unified JoinResult — kept under the engine layer's historical name.
+EngineResult = JoinResult
 
 
 class RelPass(NamedTuple):
@@ -399,7 +388,10 @@ def run_per_r_rounds(ops: LinearOps, r: Relation, s: Relation, t: Relation,
             break
         rels = ops.residual(rels, passes, bad, plan)
         plan = grown(plan, growth)
-    return PerRResult(jnp.concatenate(keys_out),
-                      np.concatenate(counts_out),
-                      jnp.concatenate(valid_out),
-                      jnp.asarray(False), rounds, np.int64(tuples))
+    keys = jnp.concatenate(keys_out)
+    counts = np.concatenate(counts_out)
+    valid = jnp.concatenate(valid_out)
+    total = int(counts[np.asarray(valid)].sum())
+    return PerRResult(count=np.int64(total), overflowed=jnp.asarray(False),
+                      tuples_read=np.int64(tuples), rounds=rounds,
+                      keys=keys, counts=counts, valid=valid)

@@ -1,0 +1,72 @@
+"""Scan-based reference baselines: whole-query retry drivers.
+
+The paper assumes near-uniform keys (§1.2) and notes that skew must be
+handled by "leaving some components to handle overflow" or re-partitioning.
+These drivers implement the naive whole-query version of that loop: on
+overflow, grow the per-bucket capacities geometrically and re-run the whole
+join.  Capacities are static shapes, so each retry re-jits; the fused
+engine's surgical per-cell recovery (``core.recovery``) replaces this in
+the production path, and these functions remain ONLY as the scan-based
+baselines the engine is benchmarked and property-tested against.
+
+(Historical note: these lived in ``core.driver`` next to the
+``engine_count``/``engine_per_r_counts`` deprecation shims; the shims are
+gone — build a ``core.query.Query`` and execute it through
+``core.session.JoinSession`` — and the baselines moved here.)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core import cyclic3, linear3, recovery, star3
+
+
+class OverflowError_(RuntimeError):
+    pass
+
+
+def _grown(plan: Any, growth: float, align: int = 8) -> Any:
+    return recovery.grown(plan, growth, align)
+
+
+def linear3_count_auto(r, s, t, plan: linear3.Linear3Plan, *,
+                       max_retries: int = 4, growth: float = 2.0, **kw):
+    """linear3_count with geometric capacity growth on overflow."""
+    for _ in range(max_retries + 1):
+        res = linear3.linear3_count(r, s, t, plan, **kw)
+        if not bool(res.overflowed):
+            return res, plan
+        plan = _grown(plan, growth)
+    raise OverflowError_(f"linear3 overflow persisted; final plan {plan}")
+
+
+def linear3_per_r_counts_auto(r, s, t, plan: linear3.Linear3Plan, *,
+                              max_retries: int = 4, growth: float = 2.0, **kw):
+    for _ in range(max_retries + 1):
+        keys, counts, valid, ovf = linear3.linear3_per_r_counts(
+            r, s, t, plan, **kw)
+        if not bool(ovf):
+            return (keys, counts, valid), plan
+        plan = _grown(plan, growth)
+    raise OverflowError_(f"linear3 per-r overflow persisted; final plan {plan}")
+
+
+def cyclic3_count_auto(r, s, t, plan: cyclic3.Cyclic3Plan, *,
+                       max_retries: int = 4, growth: float = 2.0, **kw):
+    for _ in range(max_retries + 1):
+        res = cyclic3.cyclic3_count(r, s, t, plan, **kw)
+        if not bool(res.overflowed):
+            return res, plan
+        plan = _grown(plan, growth)
+    raise OverflowError_(f"cyclic3 overflow persisted; final plan {plan}")
+
+
+def star3_count_auto(r, s, t, plan: star3.Star3Plan, *,
+                     max_retries: int = 4, growth: float = 2.0, **kw):
+    for _ in range(max_retries + 1):
+        res = star3.star3_count(r, s, t, plan, **kw)
+        if not bool(res.overflowed):
+            return res, plan
+        plan = _grown(plan, growth)
+    raise OverflowError_(f"star3 overflow persisted; final plan {plan}")

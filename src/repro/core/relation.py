@@ -5,12 +5,25 @@ final join output (aggregates are folded on the fly, §6).  A Relation is a
 dict of equal-length int32 column arrays plus a boolean validity mask; the
 capacity is static, the live count `n` is dynamic.  All core algorithms
 consume and produce Relations (or aggregates).
+
+Ingest is explicit: :meth:`Relation.append` is the ONE mutation point.  It
+compacts live rows, grows capacity along log-bucketed (power-of-two) steps
+so refreshed executions keep hitting the same compiled shapes, updates any
+cached FM sketches incrementally (sketch insertion is a monotone bitwise
+OR, so the incremental update equals a rebuild), bumps a version counter
+that cache-like layers key resident state on, and notifies registered
+append observers (``on_append``) with the delta — that notification is what
+drives :class:`~repro.core.streaming.StandingQuery` delta execution.
+Outside ``append`` the instance is immutable: the dataclass is frozen and
+``columns`` is a read-only mapping view, so direct array mutation after
+construction raises.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
+import types
+from typing import Callable, Mapping
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +38,14 @@ import jax.numpy as jnp
 SENTINEL = -0x7FFFFFFF
 
 
+def _log_bucket_capacity(need: int) -> int:
+    """Next power-of-two capacity ≥ need (min 64) — the same log-bucketing
+    rule as ``binary_join.bucket_capacity``, inlined to keep this module at
+    the bottom of the import graph.  Appends that stay within the bucket
+    reuse every compiled shape; only a bucket step re-jits."""
+    return max(64, 1 << max(0, int(need) - 1).bit_length())
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class Relation:
@@ -32,6 +53,14 @@ class Relation:
 
     columns: Mapping[str, jnp.ndarray]  # each (capacity,) int32
     valid: jnp.ndarray                  # (capacity,) bool
+
+    def __post_init__(self):
+        # direct mutation after construction must raise: freeze the column
+        # mapping behind a read-only view (the arrays themselves are
+        # immutable jax arrays) — ``append`` is the one sanctioned mutator
+        if not isinstance(self.columns, types.MappingProxyType):
+            object.__setattr__(self, "columns",
+                               types.MappingProxyType(dict(self.columns)))
 
     # -- pytree protocol ----------------------------------------------------
     def tree_flatten(self):
@@ -53,17 +82,25 @@ class Relation:
         """Dynamic number of live tuples."""
         return jnp.sum(self.valid.astype(jnp.int32))
 
+    @property
+    def version(self) -> int:
+        """Ingest version: bumped by every ``append``.  Cache-like layers
+        (the standing-query resident intermediates, service snapshots) key
+        the validity of derived state on this counter."""
+        return self.__dict__.get("_version", 0)
+
     def col(self, name: str) -> jnp.ndarray:
         return self.columns[name]
 
     # -- distinct-count sketches ---------------------------------------------
     def distinct_sketch(self, col: str) -> jnp.ndarray:
         """The column's FM/PCSA register bitmaps (``core.sketches``),
-        built on first use and cached for the life of the instance (the
-        arrays are immutable, so the sketch can never go stale).  This is
-        what lets the planner estimate distinct counts without a host
-        scan; derived relations (``select``/``mask_where``/pytree
-        reconstruction) start with an empty cache."""
+        built on first use and cached on the instance.  ``append`` updates
+        the cached sketch incrementally (FM insertion is a bitwise OR, so
+        the incremental update is exactly the rebuild), which is what lets
+        the planner estimate distinct counts without a host scan even
+        under continuous ingest; derived relations (``select``/
+        ``mask_where``/pytree reconstruction) start with an empty cache."""
         cache = self.__dict__.get("_sketch_cache")
         if cache is None:
             cache = {}
@@ -84,6 +121,75 @@ class Relation:
         est = int(round(float(sketches.fm_estimate(
             self.distinct_sketch(col)))))
         return max(1, min(est, self.capacity))
+
+    # -- ingest --------------------------------------------------------------
+    def on_append(self, callback: Callable) -> None:
+        """Register ``callback(relation, delta)`` to run after every
+        ``append`` (the standing-query ingest hook)."""
+        self.__dict__.setdefault("_observers", []).append(callback)
+
+    def remove_on_append(self, callback: Callable) -> None:
+        obs = self.__dict__.get("_observers")
+        if obs and callback in obs:
+            obs.remove(callback)
+
+    def append(self, cols: Mapping[str, jnp.ndarray] | None = None,
+               **col_arrays) -> "Relation":
+        """THE ingest mutation point: append a batch of rows in place.
+
+        ``cols`` (or keyword arrays) must cover exactly this relation's
+        schema with equal-length arrays.  Live rows are compacted to a
+        prefix, capacity grows along power-of-two buckets (so steady
+        deltas keep hitting the same compiled shapes), cached FM sketches
+        update incrementally, the :attr:`version` counter bumps, and
+        ``on_append`` observers fire with the delta — which is what drives
+        standing-query delta execution.  Returns the delta as a fresh
+        Relation.
+        """
+        arrs = dict(cols or {})
+        arrs.update(col_arrays)
+        if set(arrs) != set(self.columns):
+            raise ValueError(
+                f"append schema mismatch: got {sorted(arrs)}, relation has "
+                f"{sorted(self.columns)}")
+        arrs = {k: jnp.asarray(v, dtype=jnp.int32) for k, v in arrs.items()}
+        lens = {a.shape[0] for a in arrs.values()}
+        if len(lens) != 1:
+            raise ValueError(f"ragged delta columns: "
+                             f"{ {k: v.shape for k, v in arrs.items()} }")
+        (k,) = lens
+        delta = Relation.from_arrays(**arrs)
+        if k == 0:
+            return delta
+        n0 = int(self.n)
+        need = n0 + k
+        cap = self.capacity
+        new_cap = cap if need <= cap else _log_bucket_capacity(need)
+        # compact live rows to a prefix (stable: live order preserved),
+        # then write the delta at [n0, n0+k)
+        order = jnp.argsort(jnp.where(self.valid, 0, 1).astype(jnp.int32),
+                            stable=True)
+        pad = new_cap - cap
+        new_cols = {}
+        for name, col in self.columns.items():
+            base = col[order]
+            if pad:
+                base = jnp.pad(base, (0, pad))
+            new_cols[name] = base.at[n0:need].set(arrs[name])
+        valid = jnp.arange(new_cap) < need
+        object.__setattr__(self, "columns",
+                           types.MappingProxyType(new_cols))
+        object.__setattr__(self, "valid", valid)
+        object.__setattr__(self, "_version", self.version + 1)
+        cache = self.__dict__.get("_sketch_cache")
+        if cache:
+            from repro.core import sketches
+            ones = jnp.ones((k,), bool)
+            for name, sk in list(cache.items()):
+                cache[name] = sketches.add(sk, arrs[name], ones)
+        for cb in tuple(self.__dict__.get("_observers", ())):
+            cb(self, delta)
+        return delta
 
     # -- construction --------------------------------------------------------
     @classmethod

@@ -37,17 +37,18 @@ import numpy as np
 
 from repro.core import plan_ir, planner, recovery, sketches
 from repro.core.query import STAR_FACT_RATIO, Classification, Query
+from repro.core.results import JoinResult
 from repro.perfmodel import HW, PLASTICINE, Calibration
 
 
-@dataclasses.dataclass(frozen=True)
-class QueryResult:
-    """Uniform result for every kind, strategy and relation count."""
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class QueryResult(JoinResult):
+    """Uniform result for every kind, strategy and relation count: the
+    :class:`~repro.core.results.JoinResult` core (count / overflowed /
+    tuples_read / rounds / steps) plus the session's plan, cache and
+    timing metadata.  ``JoinSession.execute``, ``execute_sharded`` and
+    ``StandingQuery.snapshot`` all answer with this type."""
 
-    count: np.int64                       # exact cardinality (int64)
-    overflowed: bool                      # False by construction
-    tuples_read: np.int64 | None          # traffic, summed over steps/rounds
-    rounds: int                           # recovery rounds (1 = no skew)
     kind: str                             # root frontier kind (or "binary")
     strategy: str                         # "3way" | "cascade" | "hybrid"
     cache_hit: bool                       # plan came from the session cache
@@ -55,7 +56,6 @@ class QueryResult:
     exec_s: float                         # execution seconds, all steps
     plan: plan_ir.QueryPlan | None = None
     per_r: recovery.PerRResult | None = None   # per-R aggregates (linear)
-    step_stats: tuple = ()                # per-step plan_ir.StepStats
 
 
 class JoinSession:
@@ -233,7 +233,21 @@ class JoinSession:
             tuples_read=np.int64(res.tuples_read), rounds=int(res.rounds),
             kind=qp.kind, strategy=qp.strategy, cache_hit=cache_hit,
             plan_s=plan_s, exec_s=exec_s, plan=qp, per_r=res.per_r,
-            step_stats=res.step_stats)
+            steps=res.step_stats)
+
+    # -- standing queries --------------------------------------------------
+
+    def watch(self, query: Query, *, m_budget: int | None = None,
+              strategy: str | None = None):
+        """Register ``query`` as a standing query: execute it once keeping
+        every binary step's materialized intermediate resident, then keep
+        the count exact under ``Relation.append`` ingest by executing only
+        the delta plan per append (``core.streaming.StandingQuery``).
+        ``snapshot()`` on the returned handle answers with the same
+        :class:`QueryResult` type as :meth:`execute`."""
+        from repro.core.streaming import StandingQuery
+        return StandingQuery(self, query, m_budget=m_budget,
+                             strategy=strategy)
 
     # -- batched execution -------------------------------------------------
 

@@ -5,7 +5,7 @@ from hypothesis import given, settings, strategies as st
 
 from conftest import (make_rel, oracle_cyclic3_count, oracle_linear3_count,
                       oracle_linear3_per_r, oracle_pair_count)
-from repro.core import (Relation, binary_join, cyclic3, driver, linear3,
+from repro.core import (Relation, binary_join, cyclic3, linear3, reference,
                         star3)
 
 
@@ -119,7 +119,7 @@ def test_linear3_count_matches_oracle(seed, d, u):
     t, td = make_rel(rng, 160, ("c", "d"), d)
     expect = oracle_linear3_count(rd["b"], sd["b"], sd["c"], td["c"])
     plan = linear3.default_plan(150, 180, 160, m_budget=64, u=u)
-    res, _ = driver.linear3_count_auto(r, s, t, plan)
+    res, _ = reference.linear3_count_auto(r, s, t, plan)
     assert int(res.count) == expect
 
 
@@ -128,7 +128,7 @@ def test_linear3_per_r_matches_oracle(rng):
     s, sd = make_rel(rng, 120, ("b", "c"), 40)
     t, td = make_rel(rng, 110, ("c", "d"), 40)
     plan = linear3.default_plan(100, 120, 110, m_budget=48, u=4)
-    (keys, counts, valid), _ = driver.linear3_per_r_counts_auto(r, s, t, plan)
+    (keys, counts, valid), _ = reference.linear3_per_r_counts_auto(r, s, t, plan)
     # group by a on both sides
     from collections import defaultdict
     want = defaultdict(int)
@@ -153,7 +153,7 @@ def test_linear3_zipf_skew_auto_recovers(rng):
     t, td = make_rel(rng, 210, ("c", "d"), 50, zipf=1.4)
     expect = oracle_linear3_count(rd["b"], sd["b"], sd["c"], td["c"])
     plan = linear3.default_plan(200, 220, 210, m_budget=64, u=4, slack=1.5)
-    res, grown = driver.linear3_count_auto(r, s, t, plan)
+    res, grown = reference.linear3_count_auto(r, s, t, plan)
     assert int(res.count) == expect
 
 
@@ -163,7 +163,7 @@ def test_linear3_tuples_read_matches_cost_model(rng):
     s, _ = make_rel(rng, 128, ("b", "c"), 40)
     t, _ = make_rel(rng, 128, ("c", "d"), 40)
     plan = linear3.default_plan(128, 128, 128, m_budget=32, u=4)
-    res, _ = driver.linear3_count_auto(r, s, t, plan)
+    res, _ = reference.linear3_count_auto(r, s, t, plan)
     # realized tuples == |R| + |S| + h_parts * |T|, h_parts = ceil(|R|/M)
     assert int(res.tuples_read) == 128 + 128 + plan.h_parts * 128
     # and the cost model's continuous form agrees within the ceil rounding
@@ -187,7 +187,7 @@ def test_cyclic3_count_matches_oracle(seed, d, grid):
     expect = oracle_cyclic3_count(rd["a"], rd["b"], sd["b"], sd["c"],
                                   td["c"], td["a"])
     plan = cyclic3.default_plan(140, 150, 130, m_budget=64, uh=uh, ug=ug)
-    res, _ = driver.cyclic3_count_auto(r, s, t, plan)
+    res, _ = reference.cyclic3_count_auto(r, s, t, plan)
     assert int(res.count) == expect
 
 
@@ -201,7 +201,7 @@ def test_cyclic3_self_join_triangles(rng):
                                   ed["a"], ed["b"])
     plan = cyclic3.default_plan(n_edges, n_edges, n_edges, m_budget=96,
                                 uh=4, ug=4)
-    res, _ = driver.cyclic3_count_auto(e, s, t, plan)
+    res, _ = reference.cyclic3_count_auto(e, s, t, plan)
     assert int(res.count) == expect
 
 
@@ -219,6 +219,6 @@ def test_star3_count_matches_oracle(seed, d, chunks):
     t, td = make_rel(rng, 70, ("c", "d"), d)      # small dimension
     expect = oracle_linear3_count(rd["b"], sd["b"], sd["c"], td["c"])
     plan = star3.default_plan(60, 400, 70, uh=4, ug=4, chunks=chunks)
-    res, _ = driver.star3_count_auto(r, s, t, plan)
+    res, _ = reference.star3_count_auto(r, s, t, plan)
     assert int(res.count) == expect
     assert int(res.tuples_read) == 60 + 400 + 70  # every tuple read once

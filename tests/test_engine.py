@@ -7,7 +7,7 @@ from hypothesis import given, settings, strategies as st
 
 from conftest import (make_rel, oracle_cyclic3_count, oracle_linear3_count,
                       oracle_linear3_per_r, skewed_keys)
-from repro.core import cyclic3, driver, engine, linear3, planner, star3
+from repro.core import cyclic3, engine, linear3, planner, reference, star3
 from repro.core.relation import Relation
 from repro.kernels import ops as kops
 
@@ -50,7 +50,7 @@ def test_linear_fused_matches_scan(seed, d, u):
     s, sd = make_rel(rng, 180, ("b", "c"), d)
     t, td = make_rel(rng, 160, ("c", "d"), d)
     plan = linear3.default_plan(150, 180, 160, m_budget=64, u=u)
-    res_scan, grown = driver.linear3_count_auto(r, s, t, plan)
+    res_scan, grown = reference.linear3_count_auto(r, s, t, plan)
     res_fused = engine.linear3_count_fused(r, s, t, grown)
     assert int(res_fused.count) == int(res_scan.count)
     assert not bool(res_fused.overflowed)
@@ -64,7 +64,7 @@ def test_cyclic_fused_matches_scan(seed, d):
     s, _ = make_rel(rng, 150, ("b", "c"), d)
     t, _ = make_rel(rng, 130, ("c", "a"), d)
     plan = cyclic3.default_plan(140, 150, 130, m_budget=64, uh=4, ug=2)
-    res_scan, grown = driver.cyclic3_count_auto(r, s, t, plan)
+    res_scan, grown = reference.cyclic3_count_auto(r, s, t, plan)
     res_fused = engine.cyclic3_count_fused(r, s, t, grown)
     assert int(res_fused.count) == int(res_scan.count)
     assert not bool(res_fused.overflowed)
@@ -79,7 +79,7 @@ def test_star_fused_matches_scan(seed, d, chunks):
     s, _ = make_rel(rng, 400, ("b", "c"), d)
     t, _ = make_rel(rng, 70, ("c", "d"), d)
     plan = star3.default_plan(60, 400, 70, uh=4, ug=4, chunks=chunks)
-    res_scan, grown = driver.star3_count_auto(r, s, t, plan)
+    res_scan, grown = reference.star3_count_auto(r, s, t, plan)
     res_fused = engine.star3_count_fused(r, s, t, grown)
     assert int(res_fused.count) == int(res_scan.count)
     assert not bool(res_fused.overflowed)
@@ -186,7 +186,7 @@ def test_linear_zipf_recovery_exact(rng):
     t, td = make_rel(rng, 210, ("c", "d"), 50, zipf=1.4)
     want = oracle_linear3_count(rd["b"], sd["b"], sd["c"], td["c"])
     plan = linear3.default_plan(200, 220, 210, m_budget=64, u=4, slack=1.2)
-    res = driver.engine_count("linear", r, s, t, plan)
+    res = engine.MultiwayJoinEngine("linear").count(r, s, t, plan)
     assert int(res.count) == want
     assert not bool(res.overflowed)
 
@@ -201,7 +201,7 @@ def test_per_r_skew_recovery_exact(rng):
     s, sd = make_rel(rng, 200, ("b", "c"), 40, zipf=1.3)
     t, td = make_rel(rng, 190, ("c", "d"), 40, zipf=1.3)
     plan = linear3.default_plan(180, 200, 190, m_budget=64, u=4, slack=1.2)
-    res = driver.engine_per_r_counts(r, s, t, plan)
+    res = engine.MultiwayJoinEngine("linear").per_r_counts(r, s, t, plan)
     assert not bool(res.overflowed)
     from collections import defaultdict
     got = defaultdict(int)
@@ -333,7 +333,7 @@ def test_per_r_counts_are_int64(rng):
     s, sd = make_rel(rng, 140, ("b", "c"), 25)
     t, td = make_rel(rng, 130, ("c", "d"), 25)
     plan = linear3.default_plan(120, 140, 130, m_budget=48, u=4)
-    res = driver.engine_per_r_counts(r, s, t, plan)
+    res = engine.MultiwayJoinEngine("linear").per_r_counts(r, s, t, plan)
     assert np.asarray(res.counts).dtype == np.int64
 
 
@@ -368,7 +368,7 @@ def test_cyclic_fused_pairidx_matches_scan_driver(rng):
     t, _ = make_rel(rng, 380, ("c", "a"), 50)
     plan = cyclic3.default_plan(400, 420, 380, m_budget=96, uh=4, ug=2,
                                 slack=4.0)
-    res_scan, grown_plan = driver.cyclic3_count_auto(r, s, t, plan)
+    res_scan, grown_plan = reference.cyclic3_count_auto(r, s, t, plan)
     res_pair = engine.cyclic3_count_fused(r, s, t, grown_plan,
                                           pair_index=True)
     assert int(res_pair.count) == int(res_scan.count)

@@ -107,13 +107,13 @@ def test_unaligned_capacity_padding():
 def test_kernel_end_to_end_linear3(rng):
     """Full Algorithm 1 with the Pallas kernel as the inner join."""
     from conftest import make_rel, oracle_linear3_count
-    from repro.core import driver, linear3
+    from repro.core import linear3, reference
     r, rd = make_rel(rng, 90, ("a", "b"), 25)
     s, sd = make_rel(rng, 100, ("b", "c"), 25)
     t, td = make_rel(rng, 95, ("c", "d"), 25)
     expect = oracle_linear3_count(rd["b"], sd["b"], sd["c"], td["c"])
     plan = linear3.default_plan(90, 100, 95, m_budget=48, u=2)
-    res, _ = driver.linear3_count_auto(r, s, t, plan, use_kernel=True)
+    res, _ = reference.linear3_count_auto(r, s, t, plan, use_kernel=True)
     assert int(res.count) == expect
 
 

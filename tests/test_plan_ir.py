@@ -7,10 +7,9 @@ skew; 3-relation queries keep their single-step fused plans and cache
 behavior; 2-relation queries execute as one exact binary step; the plan
 cache survives ±5% data drift (log-bucketed cardinality keys) but not a
 4x resize; ``execute_many`` amortizes planning over the cache; and the
-legacy shims' DeprecationWarning points at the caller.
+legacy ``core.driver`` shims are fully retired.
 """
 
-import warnings
 from collections import defaultdict
 
 import numpy as np
@@ -18,7 +17,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from conftest import make_rel, skewed_keys
-from repro.core import driver, plan_ir, planner
+from repro.core import plan_ir, planner
 from repro.core.query import Query, QueryGraphError
 from repro.core.relation import Relation
 from repro.core.session import JoinSession
@@ -376,17 +375,15 @@ def test_execute_many_amortizes_planning(rng):
     assert sess.cache_info["hits"] == 4
 
 
-def test_deprecation_warning_points_at_caller(rng):
-    """The shim's DeprecationWarning must carry THIS file's location (the
-    caller), not driver.py's — that is what makes migration actionable."""
-    r, _ = make_rel(rng, 60, ("a", "b"), 10)
-    s, _ = make_rel(rng, 60, ("b", "c"), 10)
-    t, _ = make_rel(rng, 60, ("c", "d"), 10)
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        driver.engine_count("linear", r, s, t, m_budget=64)
-    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)]
-    assert dep and dep[0].filename == __file__
+def test_driver_shims_fully_retired():
+    """The deprecation cycle ended this release: core.driver is deleted
+    (not merely warning), and nothing in the package still imports it —
+    the scan baselines moved to core.reference."""
+    with pytest.raises(ImportError):
+        import repro.core.driver  # noqa: F401
+    import repro.core as core
+    assert not hasattr(core, "driver")
+    assert hasattr(core, "reference")
 
 
 def test_card_bucket_properties():

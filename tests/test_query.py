@@ -7,7 +7,6 @@ three kinds (including under adversarial skew); the plan cache skips
 re-planning; and the plan-level ``base_salt`` reaches the recovery rounds.
 """
 
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -15,7 +14,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from conftest import make_rel, skewed_keys
-from repro.core import driver, engine, linear3, planner, recovery
+from repro.core import engine, linear3, planner, recovery
 from repro.core.query import (Query, QueryGraphError, QuerySchemaError,
                               _legacy_query)
 from repro.core.relation import Relation
@@ -159,9 +158,8 @@ def test_session_matches_legacy_entry_points(seed, d, kind):
     assert cls_.kind == kind
     res = JoinSession(m_budget=64).execute(q)
     assert not res.overflowed
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        legacy = driver.engine_count(kind, r, s, t, m_budget=64)
+    legacy = engine.MultiwayJoinEngine(kind).count(r, s, t,
+                                                   m_budget=64)
     assert int(res.count) == int(legacy.count)
     n_r, n_s, n_t = int(r.n), int(s.n), int(t.n)
     ep = planner.plan_step(kind, n_r, n_s, n_t, d, m_budget=64)
@@ -208,9 +206,8 @@ def test_session_per_r_matches_legacy(rng):
         res.per_r.counts[np.asarray(res.per_r.valid)].sum())
     assert res.per_r.tuples_read > 0
     assert np.asarray(res.tuples_read).dtype == np.int64
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        legacy = driver.engine_per_r_counts(r, s, t, plan)
+    legacy = engine.MultiwayJoinEngine("linear").per_r_counts(r, s, t,
+                                                              plan)
     np.testing.assert_array_equal(np.asarray(res.per_r.counts),
                                   np.asarray(legacy.counts))
     np.testing.assert_array_equal(np.asarray(res.per_r.keys),
@@ -336,15 +333,25 @@ def test_fused_traffic_consistent_all_kinds(rng):
 
 
 # --------------------------------------------------------------------------
-# deprecation shims construct the equivalent Query
+# the deprecation shims are GONE; the engine front door took their place
 # --------------------------------------------------------------------------
 
-def test_legacy_shims_warn_and_match(rng):
+def test_legacy_shims_removed(rng):
+    """driver.engine_count / engine_per_r_counts completed their
+    deprecation cycle: the module is deleted outright (see the README
+    migration table), the scan baselines live on in core.reference, and
+    the _legacy_query bridge still constructs the equivalent Query for
+    the engine front door."""
+    with pytest.raises(ImportError):
+        from repro.core import driver  # noqa: F401
+    from repro.core import reference
+    for fn in ("linear3_count_auto", "linear3_per_r_counts_auto",
+               "cyclic3_count_auto", "star3_count_auto"):
+        assert callable(getattr(reference, fn))
     r, _ = make_rel(rng, 100, ("a", "b"), 20)
     s, _ = make_rel(rng, 110, ("b", "c"), 20)
     t, _ = make_rel(rng, 105, ("c", "d"), 20)
-    with pytest.warns(DeprecationWarning, match="JoinSession"):
-        res = driver.engine_count("linear", r, s, t, m_budget=64)
+    res = engine.MultiwayJoinEngine("linear").count(r, s, t, m_budget=64)
     assert not bool(res.overflowed)
     q, cls_ = _legacy_query("linear", r, s, t, {})
     assert cls_.kind == "linear"

@@ -15,7 +15,7 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from conftest import skewed_keys as _skew_mix
-from repro.core import cyclic3, driver, linear3, star3
+from repro.core import cyclic3, engine, linear3, star3
 from repro.core.relation import Relation
 from repro.kernels import ops as kops
 
@@ -70,7 +70,8 @@ def test_engine_matches_ref_under_random_skew(seed, kind, base_salt, frac, d):
         want = _ref_linear(rb, sb, sc, tc)
         plan = star3.default_plan(nr, ns, nt, uh=4, ug=4, chunks=2,
                                   slack=1.3)
-    res = driver.engine_count(kind, r, s, t, plan, base_salt=base_salt)
+    res = engine.MultiwayJoinEngine(kind, base_salt=base_salt).count(
+        r, s, t, plan)
     assert int(res.count) == want, (kind, base_salt, frac)
     assert not bool(res.overflowed)
     assert res.rounds >= 1
