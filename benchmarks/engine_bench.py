@@ -35,10 +35,11 @@ from repro.core import cyclic3, engine, linear3, plan_ir, star3  # noqa: E402
 from repro.core.query import Query  # noqa: E402
 from repro.core.relation import Relation  # noqa: E402
 from repro.core.session import JoinSession  # noqa: E402
-from repro.perfmodel import Calibration  # noqa: E402
+from repro.perfmodel import Calibration, calibrate  # noqa: E402
 
 OUT = pathlib.Path("BENCH_engine.json")
 STEPS_OUT = pathlib.Path("BENCH_plan_steps.json")
+CAL_OUT = pathlib.Path(calibrate.CALIBRATION_FILE)
 
 
 def _rel(rng, n, cols, d):
@@ -531,6 +532,12 @@ def main():
         },
     }
     OUT.write_text(json.dumps(report, indent=2))
+    # refresh the committed calibration snapshot from THIS report, so
+    # calibration_from_file never reads constants staler than the latest
+    # committed bench record (the carried ROADMAP follow-up)
+    cal = calibrate.refresh_calibration_file(report, CAL_OUT)
+    print(f"  calibration -> {CAL_OUT} (fused3 {cal.fused3_scale:.3g}, "
+          f"cascade {cal.cascade_scale:.3g}, {cal.source})")
     # per-step timing record (CI uploads this next to BENCH_engine.json)
     STEPS_OUT.write_text(json.dumps({
         "backend": jax.default_backend(), "quick": bool(args.quick),

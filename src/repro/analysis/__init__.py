@@ -1,0 +1,47 @@
+"""Static analysis over the plan IR and the repo's exactness invariants.
+
+Four entry points (see README "Static analysis & invariants"):
+
+  verify_plan      — pure static checker over ``QueryPlan`` DAGs (topo
+                     order, def-use, schema propagation, refcounts, per-R
+                     pins); always-on at session plan time, re-checked per
+                     execute under ``REPRO_VERIFY_PLANS=1``
+  widths           — integer-width dataflow analysis: bound every
+                     composite-id space, flat slot index, fused
+                     accumulator cell and Traffic64 limb from plan-time
+                     estimates (or live cardinalities) and flag int32 /
+                     f32-exactness hazards before any kernel runs
+  lint_invariants  — AST lint over ``src/repro`` enforcing the repo-wide
+                     rules (one mutation point, oracle-only np.unique,
+                     SENTINEL-derived sentinels, integer count
+                     accumulation, dispatch-gated interpret-only kernels);
+                     ``tools/check_invariants.py`` is the CI runner
+  arena_sanitizer  — opt-in dynamic shadow of ``execute_plan``'s
+                     refcounting arena and the streaming residents
+                     (``REPRO_SANITIZE_ARENA=1``)
+
+Submodules import lazily: ``analysis.errors`` sits below ``core.plan_ir``
+in the import graph (the executor raises the shared typed errors), so this
+package must be importable without touching ``repro.core``.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.analysis.errors import (  # noqa: F401
+    PlanPerRError, PlanRefcountError, PlanSchemaError, PlanStructureError,
+    PlanValidationError, PlanWidthError)
+
+_SUBMODULES = ("arena_sanitizer", "errors", "lint_invariants", "verify_plan",
+               "widths")
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.analysis.{name}")
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_SUBMODULES))

@@ -1,0 +1,240 @@
+"""AST lint enforcing the repo-wide exactness invariants over ``src/repro``.
+
+The engine's correctness argument leans on conventions no type checker
+sees: ``Relation`` is immutable except through ``append``; the device
+pipelines never fall back to host ``np.unique`` (only the oracle baselines
+in ``core/reference.py`` may); invalid-slot sentinels derive from
+``relation.SENTINEL`` instead of re-typed magic numbers; join counts
+accumulate in integers (one f32 ``sum`` caps every total at 2^24); and the
+interpret-only Pallas kernels are dispatched only where
+``kernels.ops._interpret()`` says interpret mode is on.  Each rule here is
+one of those conventions, machine-checked:
+
+=================  =====================================================
+rule               fires on
+=================  =====================================================
+relation-mutation  ``object.__setattr__(x, <field>, ...)`` for a
+                   ``Relation`` field (columns/valid/_version/
+                   _sketch_cache) outside ``core/relation.py``, or any
+                   ``.columns``/``.valid`` attribute or ``.columns[...]``
+                   subscript store
+np-unique          ``np.unique``/``numpy.unique`` calls outside
+                   ``core/reference.py`` (host oracles live there)
+sentinel-literal   a literal ``-0x7FFFFFFF`` outside ``core/relation.py``
+                   — spell it ``relation.SENTINEL``
+float-count-accum  ``sum``/``cumsum``/``bincount`` with a float ``dtype``
+                   kwarg, or ``.astype(<float>)`` directly feeding
+                   ``.sum()`` — counts must accumulate in int32/int64
+pallas-gate        ``pallas_call`` without an explicit ``interpret=``
+                   kwarg, or a call passing literal ``interpret=True``
+                   outside an ``if`` guarded by ``_interpret``
+=================  =====================================================
+
+Run via ``python tools/check_invariants.py`` (the CI gate next to ruff) or
+``python -m repro.analysis.lint_invariants [paths...]``.
+"""
+
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+_RELATION_FIELDS = frozenset(
+    {"columns", "valid", "_version", "_sketch_cache"})
+_SENTINEL_MAGNITUDE = 0x7FFFFFFF
+_FLOAT_NAMES = ("float", "float16", "float32", "float64", "bfloat16")
+
+# rule -> path suffixes (posix) where the construct is the implementation
+_ALLOWED = {
+    "relation-mutation": ("core/relation.py",),
+    "np-unique": ("core/reference.py",),
+    "sentinel-literal": ("core/relation.py",),
+}
+
+
+def _attr_chain(node) -> str:
+    """Dotted-name text of a Name/Attribute chain, '' if not one."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_float_dtype(node) -> bool:
+    chain = _attr_chain(node)
+    if chain:
+        return chain.split(".")[-1] in _FLOAT_NAMES
+    return isinstance(node, ast.Constant) and node.value in (float,)
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, rel_path: str):
+        self.rel_path = rel_path
+        self.findings: list[tuple[int, str, str]] = []
+        self._interpret_gate = 0
+
+    def _emit(self, node, rule: str, message: str) -> None:
+        if any(self.rel_path.endswith(sfx)
+               for sfx in _ALLOWED.get(rule, ())):
+            return
+        self.findings.append((node.lineno, rule, message))
+
+    # -- relation-mutation ---------------------------------------------
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for tgt in node.targets:
+            self._check_store(tgt)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._check_store(node.target)
+        self.generic_visit(node)
+
+    def _check_store(self, tgt) -> None:
+        if isinstance(tgt, ast.Attribute) and tgt.attr in ("columns",
+                                                           "valid"):
+            self._emit(tgt, "relation-mutation",
+                       f"direct store to .{tgt.attr} — Relation mutates "
+                       "only through append()")
+        if (isinstance(tgt, ast.Subscript)
+                and isinstance(tgt.value, ast.Attribute)
+                and tgt.value.attr == "columns"):
+            self._emit(tgt, "relation-mutation",
+                       "store into .columns[...] — Relation columns are "
+                       "immutable; build a new Relation or use append()")
+
+    # -- calls: object.__setattr__, np.unique, dtype kwargs, pallas ----
+
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+
+        if chain == "object.__setattr__" and len(node.args) >= 2:
+            field = node.args[1]
+            if (isinstance(field, ast.Constant)
+                    and field.value in _RELATION_FIELDS):
+                self._emit(node, "relation-mutation",
+                           f"object.__setattr__(..., {field.value!r}, ...)"
+                           " — Relation internals mutate only inside "
+                           "core/relation.py")
+
+        if chain.endswith(".unique") and chain.split(".")[0] in ("np",
+                                                                 "numpy"):
+            self._emit(node, "np-unique",
+                       "host np.unique outside core/reference.py — the "
+                       "device pipelines must not fall back to host "
+                       "dedup; oracles belong in reference.py")
+
+        # the called name even when the receiver is itself a call
+        # (``x.astype(f).sum()`` has no Name-rooted chain)
+        if isinstance(node.func, ast.Attribute):
+            func_name = node.func.attr
+        elif isinstance(node.func, ast.Name):
+            func_name = node.func.id
+        else:
+            func_name = ""
+        if func_name in ("sum", "cumsum", "bincount"):
+            for kw in node.keywords:
+                if kw.arg == "dtype" and _is_float_dtype(kw.value):
+                    self._emit(node, "float-count-accum",
+                               f"{func_name}(dtype=<float>) — count "
+                               "totals accumulate in int32/int64; one "
+                               "f32 sum caps exact totals at 2^24")
+            # .astype(<float>).sum() — float accumulation by another name
+            recv = node.func.value if isinstance(node.func,
+                                                 ast.Attribute) else None
+            if (func_name == "sum" and isinstance(recv, ast.Call)
+                    and isinstance(recv.func, ast.Attribute)
+                    and recv.func.attr == "astype"
+                    and any(_is_float_dtype(a) for a in recv.args)):
+                self._emit(node, "float-count-accum",
+                           ".astype(<float>).sum() — count totals must "
+                           "not round-trip through floats")
+
+        if func_name == "pallas_call":
+            if not any(kw.arg == "interpret" for kw in node.keywords):
+                self._emit(node, "pallas-gate",
+                           "pallas_call without an explicit interpret= "
+                           "kwarg — kernels must thread the dispatch "
+                           "gate, not rely on the Pallas default")
+        for kw in node.keywords:
+            if (kw.arg == "interpret"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True
+                    and self._interpret_gate == 0):
+                self._emit(node, "pallas-gate",
+                           "literal interpret=True outside an "
+                           "_interpret() dispatch gate — interpret-only "
+                           "kernels must be gated so compiled mode never "
+                           "silently falls back")
+        self.generic_visit(node)
+
+    def visit_If(self, node: ast.If) -> None:
+        gated = any(isinstance(n, (ast.Name, ast.Attribute))
+                    and _attr_chain(n).split(".")[-1] == "_interpret"
+                    for n in ast.walk(node.test))
+        self.visit(node.test)
+        if gated:
+            self._interpret_gate += 1
+        for child in node.body:
+            self.visit(child)
+        if gated:
+            self._interpret_gate -= 1
+        for child in node.orelse:
+            self.visit(child)
+
+    # -- sentinel-literal ----------------------------------------------
+
+    def visit_UnaryOp(self, node: ast.UnaryOp) -> None:
+        if (isinstance(node.op, ast.USub)
+                and isinstance(node.operand, ast.Constant)
+                and node.operand.value == _SENTINEL_MAGNITUDE):
+            self._emit(node, "sentinel-literal",
+                       "literal -0x7FFFFFFF — derive sentinels from "
+                       "relation.SENTINEL so they stay in one place")
+        self.generic_visit(node)
+
+
+def lint_file(path: Path, root: Path | None = None) -> list[str]:
+    """Lint one file; findings as ``path:line: [rule] message``."""
+    rel = path.as_posix()
+    if root is not None:
+        try:
+            rel = path.relative_to(root).as_posix()
+        except ValueError:
+            pass
+    tree = ast.parse(path.read_text(), filename=str(path))
+    v = _Visitor(path.as_posix())
+    v.visit(tree)
+    return [f"{rel}:{line}: [{rule}] {msg}"
+            for line, rule, msg in sorted(v.findings)]
+
+
+def lint_paths(paths) -> list[str]:
+    """Lint every ``.py`` file under each path (file or directory)."""
+    findings: list[str] = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            findings.extend(lint_file(f, root=Path.cwd()))
+    return findings
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv:
+        argv = ["src/repro"]
+    findings = lint_paths(argv)
+    for f in findings:
+        print(f)
+    print(f"invariant lint: {len(findings)} finding(s) over {argv}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -43,23 +43,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import partition
+from repro.core.reference import host_join_count  # noqa: F401  (oracle —
+#   lives in core.reference now, the one np.unique-allowed module; kept
+#   re-exported here because it is THE parity oracle for this module)
 from repro.core.relation import SENTINEL, Relation
 
 _MASK15 = 0x7FFF
-
-
-def host_join_count(build: Relation, build_key: str,
-                    probe: Relation, probe_key: str) -> int:
-    """Exact ``|build ⋈ probe|`` via host-side key histograms (np.unique +
-    intersect1d).  The former ``exact_join_count`` — kept as the parity
-    oracle for the device-side path; nothing on the execution hot path
-    calls it."""
-    bv = np.asarray(build.col(build_key))[np.asarray(build.valid)]
-    pv = np.asarray(probe.col(probe_key))[np.asarray(probe.valid)]
-    bu, bc = np.unique(bv, return_counts=True)
-    pu, pc = np.unique(pv, return_counts=True)
-    _, bi, pi = np.intersect1d(bu, pu, return_indices=True)
-    return int((bc[bi].astype(np.int64) * pc[pi].astype(np.int64)).sum())
 
 
 def _sum64(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -197,12 +186,13 @@ def join_materialize(build: Relation, build_key: str,
 
     cols = {}
     for name, col in sbuild.columns.items():
-        cols[build_prefix + name] = jnp.where(ok, col[bidx], jnp.int32(-0x7FFFFFFF))
+        cols[build_prefix + name] = jnp.where(ok, col[bidx],
+                                              jnp.int32(SENTINEL))
     for name, col in probe.columns.items():
         key = probe_prefix + name
         if key in cols:  # join column appears once
             continue
-        cols[key] = jnp.where(ok, col[owner], jnp.int32(-0x7FFFFFFF))
+        cols[key] = jnp.where(ok, col[owner], jnp.int32(SENTINEL))
     return MaterializeResult(Relation(cols, ok), total, total > out_capacity)
 
 

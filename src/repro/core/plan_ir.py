@@ -40,12 +40,16 @@ executor too — there is no second cascade implementation.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Mapping, NamedTuple
 
 import jax
 import numpy as np
 
+from repro.analysis import arena_sanitizer
+from repro.analysis.errors import (PlanPerRError, PlanStructureError,
+                                   PlanWidthError)
 from repro.core import binary_join, engine, recovery
 from repro.core.query import Predicate
 from repro.core.relation import Relation
@@ -229,8 +233,9 @@ def _run_fused3(step: PlanStep, plan: QueryPlan, env):
                                  m_budget=plan.m_budget)
     if step.per_r_key is not None:
         if step.kind != "linear":
-            raise ValueError("per-R fused steps must be linear; planner "
-                             f"emitted kind {step.kind!r}")
+            raise PlanPerRError(
+                "per-R fused steps must be linear; planner emitted kind "
+                f"{step.kind!r}", step=step)
         return recovery.run_per_r_rounds(
             recovery.LinearOps(**dict(step.cols)), r, s, t, shape,
             max_rounds=plan.max_rounds, growth=plan.growth,
@@ -271,6 +276,15 @@ def execute_plan(plan: QueryPlan, relations: Mapping[str, Relation], *,
     standing-query path, which keeps them resident and refreshes them
     incrementally on ingest instead of recomputing.
     """
+    if os.environ.get("REPRO_VERIFY_PLANS", "") not in ("", "0"):
+        # execute-time re-verification: static checks against the live
+        # environment plus width analysis over the live cardinalities
+        from repro.analysis import verify_plan as _verify
+        from repro.analysis import widths as _widths
+        _verify.verify_plan(plan, external=set(relations))
+        _widths.check_widths(
+            plan, {name: int(rel.n) for name, rel in relations.items()})
+
     steps = plan.steps
     env: dict[str, Relation] = dict(relations)
     # arena refcounts: consumers left per environment name (base relations
@@ -279,11 +293,16 @@ def execute_plan(plan: QueryPlan, relations: Mapping[str, Relation], *,
     for s in steps:
         for n in s.inputs:
             readers[n] = readers.get(n, 0) + 1
+    shadow = arena_sanitizer.begin(plan, relations, keep_intermediates)
 
     def release(name: str) -> None:
+        if shadow is not None:
+            shadow.on_release(name)
         readers[name] -= 1
         if (readers[name] == 0 and name.startswith("%")
                 and not keep_intermediates):
+            if shadow is not None:
+                shadow.on_drop(name)
             env.pop(name, None)
 
     staged: dict[int, _Staged] = {}
@@ -318,15 +337,17 @@ def execute_plan(plan: QueryPlan, relations: Mapping[str, Relation], *,
                 out = None
             else:
                 if total >= 2**31:
-                    raise ValueError(
+                    raise PlanWidthError(
                         f"intermediate {step.out} has {total} rows — too "
                         "large to materialize; re-plan with "
                         "strategy='3way' (the fused 3-way engine never "
-                        "materializes the join output)")
+                        "materializes the join output)", step=step)
                 cap = binary_join.bucket_capacity(total)
                 t_d = time.perf_counter()
                 out = binary_join.gather_staged(sg.staged, sg.probe, cap)
                 dispatch_s += time.perf_counter() - t_d
+                if shadow is not None:
+                    shadow.on_produce(step.out)
                 env[step.out] = out
                 tuples += total               # intermediate written once
                 # producing %i<k> may unblock dependent steps: overlap
@@ -342,9 +363,10 @@ def execute_plan(plan: QueryPlan, relations: Mapping[str, Relation], *,
                 (time.perf_counter() - t0) if profile else 0.0))
         elif step.op == "fused3":
             if not step.aggregate:
-                raise ValueError(
+                raise PlanStructureError(
                     "fused3 steps aggregate (the engine never materializes "
-                    f"its output); step {step.out!r} tries to materialize")
+                    f"its output); step {step.out!r} tries to materialize",
+                    step=step)
             res = _run_fused3(step, plan, env)
             for n in step.inputs:
                 release(n)
@@ -358,8 +380,11 @@ def execute_plan(plan: QueryPlan, relations: Mapping[str, Relation], *,
                 int(res.tuples_read), time.perf_counter() - t0, 0.0,
                 (time.perf_counter() - t0) if profile else 0.0))
         else:
-            raise ValueError(f"unknown plan-step op {step.op!r}")
+            raise PlanStructureError(f"unknown plan-step op {step.op!r}",
+                                     step=step)
     overflowed = bool(per_r.overflowed) if per_r is not None else False
+    if shadow is not None:
+        shadow.finish(env)
     inter = None
     if keep_intermediates:
         inter = {s.out: env[s.out] for s in steps

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.analysis.errors import PlanPerRError
 from repro.core import binary_join, cyclic3, engine, linear3, plan_ir, star3
 from repro.core.cost_model import (  # noqa: F401  (traffic layer)
     PlanChoice, cascaded_binary_tuples, choose_cyclic_strategy,
@@ -252,7 +253,7 @@ def pin_per_r_classification(cls_: Classification,
     linear-engine ops, and every star is also a valid path); cyclic and
     centre pins are errors."""
     if cls_.kind == "cyclic":
-        raise ValueError(
+        raise PlanPerRError(
             "per-R counts are defined for linear (path) queries; this "
             "query classified as 'cyclic'")
     if cls_.kind == "star":
@@ -260,7 +261,7 @@ def pin_per_r_classification(cls_: Classification,
                               roles=cls_.roles, cols=cls_.cols)
     role_map = cls_.role_map
     if per_r_name == role_map["s"]:
-        raise ValueError(
+        raise PlanPerRError(
             f"per-R relation {per_r_name!r} is the path centre; per-R "
             "counts group by a path endpoint")
     if per_r_name == role_map["t"]:
@@ -416,18 +417,18 @@ def plan_query(query: Query, cards=None, *, m_budget: int | None = None,
     n = len(names)
     if per_r_name is not None:
         if per_r_name not in rels:
-            raise ValueError(f"per-R relation {per_r_name!r} is not one of "
-                             f"the query's relations {sorted(rels)}")
+            raise PlanPerRError(f"per-R relation {per_r_name!r} is not one "
+                                f"of the query's relations {sorted(rels)}")
         if per_r_key not in rels[per_r_name].columns:
-            raise ValueError(f"per-R key column {per_r_key!r} is not a "
-                             f"column of relation {per_r_name!r}")
+            raise PlanPerRError(f"per-R key column {per_r_key!r} is not a "
+                                f"column of relation {per_r_name!r}")
         if strategy == "cascade":
-            raise ValueError("per-R counts need the fused multiway root "
-                             "(recovery per-R rounds); they have no "
-                             "binary-cascade form")
+            raise PlanPerRError("per-R counts need the fused multiway root "
+                                "(recovery per-R rounds); they have no "
+                                "binary-cascade form")
         if n == 2:
-            raise ValueError("per-R counts need a fused 3-way root; a "
-                             "2-relation query has none")
+            raise PlanPerRError("per-R counts need a fused 3-way root; a "
+                                "2-relation query has none")
         # the fused root IS the per-R implementation — pin it
         strategy = "3way"
     if cards is None:
@@ -509,7 +510,7 @@ def plan_query(query: Query, cards=None, *, m_budget: int | None = None,
             f"{len(edges)} predicates — N-way queries must form a tree "
             "(connected and acyclic)")
     if per_r_name is not None and len(adj[per_r_name]) != 1:
-        raise ValueError(
+        raise PlanPerRError(
             f"per-R relation {per_r_name!r} joins "
             f"{len(adj[per_r_name])} relations; N-way per-R counts need "
             "the pinned relation to be a leaf of the predicate tree (so "

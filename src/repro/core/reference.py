@@ -1,4 +1,5 @@
-"""Scan-based reference baselines: whole-query retry drivers.
+"""Scan-based reference baselines: whole-query retry drivers and the host
+join-count oracle.
 
 The paper assumes near-uniform keys (§1.2) and notes that skew must be
 handled by "leaving some components to handle overflow" or re-partitioning.
@@ -8,6 +9,11 @@ join.  Capacities are static shapes, so each retry re-jits; the fused
 engine's surgical per-cell recovery (``core.recovery``) replaces this in
 the production path, and these functions remain ONLY as the scan-based
 baselines the engine is benchmarked and property-tested against.
+
+This module is also the one place host ``np.unique`` is allowed (the
+``analysis.lint_invariants`` np-unique rule): :func:`host_join_count` is
+the host-histogram parity oracle the device-side ``exact_join_count`` is
+tested against — nothing on the execution hot path calls it.
 
 (Historical note: these lived in ``core.driver`` next to the
 ``engine_count``/``engine_per_r_counts`` deprecation shims; the shims are
@@ -19,11 +25,27 @@ from __future__ import annotations
 
 from typing import Any
 
+import numpy as np
+
 from repro.core import cyclic3, linear3, recovery, star3
+from repro.core.relation import Relation
 
 
 class OverflowError_(RuntimeError):
     pass
+
+
+def host_join_count(build: Relation, build_key: str,
+                    probe: Relation, probe_key: str) -> int:
+    """Exact ``|build ⋈ probe|`` via host-side key histograms (np.unique +
+    intersect1d).  The former ``exact_join_count`` — kept as the parity
+    oracle for the device-side path (re-exported from ``binary_join``)."""
+    bv = np.asarray(build.col(build_key))[np.asarray(build.valid)]
+    pv = np.asarray(probe.col(probe_key))[np.asarray(probe.valid)]
+    bu, bc = np.unique(bv, return_counts=True)
+    pu, pc = np.unique(pv, return_counts=True)
+    _, bi, pi = np.intersect1d(bu, pu, return_indices=True)
+    return int((bc[bi].astype(np.int64) * pc[pi].astype(np.int64)).sum())
 
 
 def _grown(plan: Any, growth: float, align: int = 8) -> Any:

@@ -105,6 +105,23 @@ class JoinSession:
     def clear_plan_cache(self) -> None:
         self._plan_cache.clear()
 
+    def refresh_calibration(self, bench="BENCH_engine.json", *,
+                            out_path=None, shape: str = "cascade_4way"
+                            ) -> Calibration:
+        """Re-derive the time-model calibration from a bench report,
+        persist it to the committed calibration file
+        (``perfmodel.CALIBRATION_FILE``), and adopt it for this session.
+        The plan cache is cleared: cached plans embed 3-way/cascade
+        decisions made under the old scales, and the calibration is part
+        of the cache key anyway."""
+        from repro.perfmodel import calibrate
+        cal = calibrate.refresh_calibration_file(
+            bench, calibrate.CALIBRATION_FILE if out_path is None
+            else out_path, shape=shape)
+        self.calibration = cal
+        self.clear_plan_cache()
+        return cal
+
     def _cache_key(self, query: Query, cards: dict[str, int],
                    m_budget: int | None, strategy: str | None,
                    forced: Classification | None,
@@ -146,6 +163,15 @@ class JoinSession:
             star_fact_ratio=self.star_fact_ratio, strategy=strategy,
             classification=forced, calibration=self.calibration,
             per_r_name=per_r_name, per_r_key=per_r_key)
+        # every plan the session caches is statically verified: DAG shape,
+        # schema propagation, refcounts, per-R pins, and the width bounds
+        # of every composite-id space / accumulator at the estimated cards
+        # (imports deferred: analysis sits above core in the import graph)
+        from repro.analysis.verify_plan import verify_plan
+        from repro.analysis.widths import check_widths
+        verify_plan(qp, schemas={name: frozenset(rel.columns)
+                                 for name, rel in query.relations.items()})
+        check_widths(qp, cards)
         self._plan_cache[key] = qp
         return qp, False
 
@@ -218,6 +244,12 @@ class JoinSession:
             qp = planner._single_fused_plan(
                 query, cls_, ep,
                 per_r_key=(key_col if per_r_name else None))
+            from repro.analysis.verify_plan import verify_plan
+            from repro.analysis.widths import check_widths
+            verify_plan(qp, schemas={
+                name: frozenset(rel.columns)
+                for name, rel in query.relations.items()})
+            check_widths(qp, cards)
             cache_hit = False
         else:
             qp, cache_hit = self._plan(query, cards, m_budget, strategy,

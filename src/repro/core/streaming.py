@@ -43,6 +43,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import arena_sanitizer
 from repro.core import plan_ir
 from repro.core.plan_ir import COUNT, PlanStep, QueryPlan
 from repro.core.query import Predicate, Query
@@ -179,6 +180,10 @@ class StandingQuery:
         self._last_exec_s = time.perf_counter() - t1
         self._plan = qp
         self._intermediates = dict(res.intermediates or {})
+        # sanitizer (opt-in): the residents must be exactly the plan's
+        # materialized outs — a divergence here means later delta rounds
+        # would join against stale or missing intermediates
+        arena_sanitizer.check_residents(qp, self._intermediates)
         self._delta_shapes.clear()
         self._count = int(res.count)
         self._tuples += int(res.tuples_read)
@@ -248,6 +253,8 @@ class StandingQuery:
                 self._merge_intermediate(
                     orig_out, (res.intermediates or {})[delta_out],
                     rows.get(delta_out, 0))
+            arena_sanitizer.check_residents(self._plan,
+                                            self._intermediates)
         self._count += int(res.count)
         self._tuples += int(res.tuples_read)
         self._rounds += int(res.rounds)
@@ -377,6 +384,11 @@ class StandingQuery:
             return
         resident = self._intermediates.get(orig_out)
         if resident is None:       # plan had no materialize step resident
+            if arena_sanitizer.active() and orig_out.startswith("%"):
+                raise arena_sanitizer.ArenaSanitizerError(
+                    f"arena shadow: delta merge targets {orig_out!r} but "
+                    "no resident intermediate exists — the standing "
+                    "plan's residents leaked or were never kept")
             return
         resident.append({c: v[:rows]
                          for c, v in delta_rel.columns.items()})

@@ -32,6 +32,13 @@ _SENT = {"r": SENT_BASE + 1, "s": SENT_BASE + 2, "t": SENT_BASE + 3,
          "a": SENT_BASE + 4, "b": SENT_BASE + 5}
 assert len(set(_SENT.values()) | {SENTINEL}) == len(_SENT) + 1
 
+# Largest integer f32 represents exactly (24-bit mantissa).  The fused
+# kernels accumulate per-cell partials in int32 on purpose; any compiled
+# variant tempted to accumulate in f32 (e.g. to ride the MXU) silently
+# loses counts past this — ``analysis.widths`` flags accumulator cells
+# whose capacity-product ceiling crosses it.
+EXACT_F32_MAX = 1 << 24
+
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"

@@ -1,5 +1,6 @@
 from repro.perfmodel.calibrate import (  # noqa: F401
-    IDENTITY, Calibration, calibration_from_bench)
+    CALIBRATION_FILE, IDENTITY, Calibration, calibration_from_bench,
+    calibration_from_file, refresh_calibration_file)
 from repro.perfmodel.hw import CPU_XEON, HW, PLASTICINE, TPU_V5E  # noqa: F401
 from repro.perfmodel.model import (  # noqa: F401
     Breakdown, binary_cascade_time, cpu_cascade_time, linear3_time,

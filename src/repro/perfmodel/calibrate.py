@@ -85,3 +85,49 @@ def calibration_from_bench(bench: Mapping[str, Any] | str | pathlib.Path,
         return IDENTITY
     return Calibration(fused3_scale=float(f3), cascade_scale=float(cs),
                        source=f"bench:{shape}")
+
+
+# ---------------------------------------------------------------------------
+# persistence: the committed calibration file
+# ---------------------------------------------------------------------------
+
+# The committed snapshot next to BENCH_engine.json.  The bench refreshes it
+# after every run (``engine_bench.main`` calls ``refresh_calibration_file``)
+# so ``calibration_from_file`` never reads constants staler than the last
+# committed bench report.
+CALIBRATION_FILE = "CALIBRATION_engine.json"
+
+
+def refresh_calibration_file(bench: Mapping[str, Any] | str | pathlib.Path
+                             = "BENCH_engine.json",
+                             out_path: str | pathlib.Path = CALIBRATION_FILE,
+                             *, shape: str = "cascade_4way") -> Calibration:
+    """Re-derive the calibration from ``bench`` and persist it to
+    ``out_path``.  Returns the calibration written (the identity one when
+    the bench record is missing or degenerate — persisted too, so a stale
+    non-identity file cannot outlive the report that justified it)."""
+    cal = calibration_from_bench(bench, shape=shape)
+    payload = {"fused3_scale": cal.fused3_scale,
+               "cascade_scale": cal.cascade_scale,
+               "source": cal.source, "shape": shape}
+    pathlib.Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
+    return cal
+
+
+def calibration_from_file(path: str | pathlib.Path = CALIBRATION_FILE
+                          ) -> Calibration:
+    """Load the committed calibration snapshot; identity when absent or
+    malformed (same never-guess posture as ``calibration_from_bench``)."""
+    p = pathlib.Path(path)
+    if not p.exists():
+        return IDENTITY
+    try:
+        payload = json.loads(p.read_text())
+        f3 = float(payload["fused3_scale"])
+        cs = float(payload["cascade_scale"])
+    except (ValueError, KeyError, TypeError):
+        return IDENTITY
+    if not all(1.0 / _MAX_SCALE <= s <= _MAX_SCALE for s in (f3, cs)):
+        return IDENTITY
+    return Calibration(fused3_scale=f3, cascade_scale=cs,
+                       source=str(payload.get("source", f"file:{p}")))

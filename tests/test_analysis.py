@@ -1,0 +1,576 @@
+"""Tests for ``repro.analysis``: the plan verifier, the integer-width
+dataflow analysis, the arena sanitizer, the repo invariant lint, and the
+calibration persistence helpers.
+
+Property test: the verifier accepts every plan the planner emits over
+random 2–6-relation join trees (uniform and skewed keys) under every
+strategy.  Mutation tests: corrupting a specific field of a valid plan
+raises the matching typed diagnostic.  Width regressions pin the two
+seeded hazards from the issue: an int32 composite-id overflow (error) and
+a 2^24 exact-f32 accumulator ceiling (hazard), both caught at plan time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from conftest import make_rel, oracle_linear3_count, skewed_keys
+from repro.analysis import arena_sanitizer, lint_invariants
+from repro.analysis.arena_sanitizer import ArenaSanitizerError, ArenaShadow
+from repro.analysis.errors import (PlanPerRError, PlanRefcountError,
+                                   PlanSchemaError, PlanStructureError,
+                                   PlanValidationError, PlanWidthError)
+from repro.analysis.verify_plan import verify_plan
+from repro.analysis.widths import analyze_widths, check_widths
+from repro.core import planner
+from repro.core.cyclic3 import Cyclic3Plan
+from repro.core.linear3 import Linear3Plan
+from repro.core.plan_ir import execute_plan
+from repro.core.query import Query
+from repro.core.relation import Relation
+from repro.core.session import JoinSession
+from repro.kernels.ops import EXACT_F32_MAX
+from repro.perfmodel import calibrate
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+
+def _cards(query: Query) -> dict[str, int]:
+    return {name: int(rel.n) for name, rel in query.relations.items()}
+
+
+def _schemas(query: Query) -> dict[str, frozenset]:
+    return {name: frozenset(rel.columns)
+            for name, rel in query.relations.items()}
+
+
+def _linear_chain(rng, n=120, d=25):
+    r, rd = make_rel(rng, n, ("a", "b"), d)
+    s, sd = make_rel(rng, n + 30, ("b", "c"), d)
+    t, td = make_rel(rng, n + 10, ("c", "d"), d)
+    q = Query({"r": r, "s": s, "t": t},
+              [("r.b", "s.b"), ("s.c", "t.c")])
+    return q, {"r": rd, "s": sd, "t": td}
+
+
+def _triangle(rng, n=120, d=25):
+    r, _ = make_rel(rng, n, ("a", "b"), d)
+    s, _ = make_rel(rng, n + 20, ("b", "c"), d)
+    t, _ = make_rel(rng, n + 10, ("c", "a"), d)
+    return Query({"r": r, "s": s, "t": t},
+                 [("r.b", "s.b"), ("s.c", "t.c"), ("t.a", "r.a")])
+
+
+def _random_tree_query(seed: int, n_rel: int, skew: bool) -> Query:
+    """A random connected acyclic join tree: relation i joins an earlier
+    relation on a shared column ``k<i>``; every relation also carries a
+    payload column.  This is the full space of query graphs the planner's
+    contraction path handles for N >= 2."""
+    rng = np.random.default_rng(seed)
+    parents = {i: int(rng.integers(1, i)) for i in range(2, n_rel + 1)}
+    cols: dict[int, set[str]] = {i: {f"p{i}"} for i in range(1, n_rel + 1)}
+    for i, p in parents.items():
+        cols[i].add(f"k{i}")
+        cols[p].add(f"k{i}")
+    rels = {}
+    for i in range(1, n_rel + 1):
+        n = int(rng.integers(40, 200))
+        d = int(rng.integers(8, 40))
+        data = {}
+        for c in sorted(cols[i]):
+            if skew and c == f"k{i}":
+                data[c] = skewed_keys(rng, n, d, 0.4)
+            else:
+                data[c] = rng.integers(0, d, size=n).astype(np.int32)
+        rels[f"r{i}"] = Relation.from_arrays(**data)
+    preds = [(f"r{i}.k{i}", f"r{p}.k{i}")
+             for i, p in sorted(parents.items())]
+    return Query(rels, preds)
+
+
+# --------------------------------------------------------------------------
+# verifier: every planner-emitted plan passes (property)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10**6),
+       n_rel=st.integers(min_value=2, max_value=6),
+       skew=st.booleans(),
+       strategy=st.sampled_from(["default", "3way", "cascade"]))
+def test_verifier_accepts_planner_plans(seed, n_rel, skew, strategy):
+    query = _random_tree_query(seed, n_rel, skew)
+    if n_rel == 2 and strategy == "3way":
+        strategy = "default"
+    cards = _cards(query)
+    qp = planner.plan_query(query, cards, m_budget=64,
+                            strategy=None if strategy == "default"
+                            else strategy)
+    # plan-time mode (schemas: schema propagation end to end) ...
+    verify_plan(qp, schemas=_schemas(query))
+    # ... and execute-time mode (external environment names)
+    verify_plan(qp, external=set(cards))
+    # width analysis never errors on a planner-emitted small plan
+    for diag in check_widths(qp, cards):
+        assert diag.severity == "hazard"
+
+
+def test_verifier_accepts_per_r_plan(rng):
+    query, _ = _linear_chain(rng)
+    cards = _cards(query)
+    r_name = dict(query.classify(cards).roles)["r"]
+    qp = planner.plan_query(query, cards, m_budget=64, strategy="3way",
+                            per_r_name=r_name)
+    assert any(s.per_r_key is not None for s in qp.steps)
+    verify_plan(qp, schemas=_schemas(query))
+
+
+def test_verifier_accepts_triangle_plan(rng):
+    query = _triangle(rng)
+    qp = planner.plan_query(query, _cards(query), m_budget=64,
+                            strategy="3way")
+    assert qp.steps[-1].kind == "cyclic"
+    verify_plan(qp, schemas=_schemas(query))
+
+
+# --------------------------------------------------------------------------
+# verifier: mutations raise the matching typed diagnostic
+# --------------------------------------------------------------------------
+
+@pytest.fixture
+def lin_cascade(rng):
+    query, _ = _linear_chain(rng)
+    qp = planner.plan_query(query, _cards(query), m_budget=64,
+                            strategy="cascade")
+    assert len(qp.steps) == 2 and qp.steps[0].op == "binary"
+    return query, qp
+
+
+@pytest.fixture
+def lin_fused(rng):
+    query, _ = _linear_chain(rng)
+    qp = planner.plan_query(query, _cards(query), m_budget=64,
+                            strategy="3way")
+    assert len(qp.steps) == 1 and qp.steps[0].op == "fused3"
+    return query, qp
+
+
+def test_verifier_rejects_reversed_steps(lin_cascade):
+    query, qp = lin_cascade
+    bad = dataclasses.replace(qp, steps=tuple(reversed(qp.steps)))
+    with pytest.raises(PlanStructureError):
+        verify_plan(bad, schemas=_schemas(query))
+
+
+def test_verifier_rejects_duplicate_out(rng):
+    query = Query({f"r{i + 1}": make_rel(rng, 80, cols, 20)[0]
+                   for i, cols in enumerate((("a", "b"), ("b", "c"),
+                                             ("c", "d"), ("d", "e")))},
+                  [("r1.b", "r2.b"), ("r2.c", "r3.c"), ("r3.d", "r4.d")])
+    qp = planner.plan_query(query, _cards(query), m_budget=64,
+                            strategy="cascade")
+    assert len(qp.steps) == 3
+    steps = list(qp.steps)
+    steps[1] = dataclasses.replace(steps[1], out=steps[0].out)
+    with pytest.raises(PlanStructureError):
+        verify_plan(dataclasses.replace(qp, steps=tuple(steps)),
+                    schemas=_schemas(query))
+
+
+def test_verifier_rejects_bad_column_binding(lin_fused):
+    query, qp = lin_fused
+    root = qp.steps[0]
+    bad_cols = tuple((k, "zz" if k == "rb" else v) for k, v in root.cols)
+    bad = dataclasses.replace(
+        qp, steps=(dataclasses.replace(root, cols=bad_cols),))
+    with pytest.raises(PlanSchemaError):
+        verify_plan(bad, schemas=_schemas(query))
+
+
+def test_verifier_rejects_bad_projection_source(lin_cascade):
+    query, qp = lin_cascade
+    step0 = qp.steps[0]
+    assert step0.project
+    proj_a = tuple(("zz", dst) for _src, dst in step0.project[0])
+    bad0 = dataclasses.replace(step0,
+                               project=(proj_a,) + step0.project[1:])
+    with pytest.raises(PlanSchemaError):
+        verify_plan(dataclasses.replace(qp, steps=(bad0,) + qp.steps[1:]),
+                    schemas=_schemas(query))
+
+
+def test_verifier_rejects_unconsumed_intermediate(lin_cascade, lin_fused):
+    query, cascade = lin_cascade
+    _, fused = lin_fused
+    # a materialize step whose %i0 no later step reads: the refcounting
+    # arena would hold the buffer for the whole walk
+    bad = dataclasses.replace(
+        cascade, steps=(cascade.steps[0], fused.steps[0]))
+    with pytest.raises(PlanRefcountError):
+        verify_plan(bad, schemas=_schemas(query))
+
+
+def test_verifier_rejects_per_r_on_cyclic(rng):
+    query = _triangle(rng)
+    qp = planner.plan_query(query, _cards(query), m_budget=64,
+                            strategy="3way")
+    bad_root = dataclasses.replace(qp.steps[0], per_r_key="a")
+    with pytest.raises(PlanPerRError):
+        verify_plan(dataclasses.replace(qp, steps=(bad_root,)),
+                    schemas=_schemas(query))
+
+
+def test_verifier_rejects_unrecovered_fused(lin_fused):
+    query, qp = lin_fused
+    bad_root = dataclasses.replace(qp.steps[0], recovery=False)
+    with pytest.raises(PlanStructureError):
+        verify_plan(dataclasses.replace(qp, steps=(bad_root,)),
+                    schemas=_schemas(query))
+
+
+def test_verifier_rejects_orphan_relation(lin_fused, rng):
+    query, qp = lin_fused
+    schemas = dict(_schemas(query))
+    schemas["zzz"] = frozenset({"a"})
+    with pytest.raises(PlanStructureError, match="orphan"):
+        verify_plan(qp, schemas=schemas)
+
+
+def test_verifier_error_names_failing_step(lin_cascade):
+    query, qp = lin_cascade
+    bad = dataclasses.replace(qp, steps=tuple(reversed(qp.steps)))
+    with pytest.raises(PlanStructureError) as exc:
+        verify_plan(bad, schemas=_schemas(query))
+    msg = str(exc.value)
+    assert "at step[" in msg and "<-" in msg
+
+
+# --------------------------------------------------------------------------
+# width analysis: the two seeded regressions + clean plans
+# --------------------------------------------------------------------------
+
+def test_widths_composite_id_overflow_is_plan_time_error(rng):
+    """A pinned cyclic shape whose role-r composite-id space
+    (h_parts * g_parts * uh * ug = 2^34) cannot be hashed in int32 must be
+    refused at plan time, before any device work."""
+    query = _triangle(rng)
+    qp = planner.plan_query(query, _cards(query), m_budget=64,
+                            strategy="3way")
+    shape = Cyclic3Plan(h_parts=2**13, g_parts=2**13, uh=16, ug=16,
+                        f_parts=2, r_cap=8, s_cap=8, t_cap=8)
+    bad_root = dataclasses.replace(qp.steps[0], shape_plan=shape)
+    bad = dataclasses.replace(qp, steps=(bad_root,))
+    with pytest.raises(PlanWidthError) as exc:
+        check_widths(bad, _cards(query))
+    errors = [d for d in exc.value.diagnostics if d.severity == "error"]
+    assert any("composite-id" in d.quantity for d in errors)
+    assert all(d.width_needed.startswith("int3") for d in errors)
+
+
+def test_widths_f32_accumulator_ceiling_is_hazard(rng):
+    """A linear shape whose per-cell accumulator ceiling
+    (r_cap * g_parts * s_cap * t_cap) crosses 2^24 is flagged as a hazard
+    (a compiled f32 kernel would lose counts) but does NOT fail the plan —
+    the product is a total-skew ceiling, not a guarantee."""
+    query, _ = _linear_chain(rng)
+    qp = planner.plan_query(query, _cards(query), m_budget=64,
+                            strategy="3way")
+    shape = Linear3Plan(h_parts=4, u=8, g_parts=64,
+                        r_cap=64, s_cap=64, t_cap=72)
+    assert shape.r_cap * shape.g_parts * shape.s_cap * shape.t_cap \
+        > EXACT_F32_MAX
+    root = dataclasses.replace(qp.steps[0], shape_plan=shape)
+    plan = dataclasses.replace(qp, steps=(root,))
+    diags = check_widths(plan, _cards(query))   # must NOT raise
+    hz = [d for d in diags if d.quantity == "accumulator cell ceiling"]
+    assert len(hz) == 1 and hz[0].severity == "hazard"
+    assert hz[0].limit == EXACT_F32_MAX
+    assert hz[0].bound == 64 * 64 * 64 * 72
+
+
+def test_widths_materialize_overflow_is_error(lin_cascade):
+    query, qp = lin_cascade
+    big0 = dataclasses.replace(qp.steps[0], est_out=2**31)
+    bad = dataclasses.replace(qp, steps=(big0,) + qp.steps[1:])
+    with pytest.raises(PlanWidthError, match="materialized rows"):
+        check_widths(bad, _cards(query))
+
+
+def test_widths_input_cardinality_overflow_is_error(lin_fused):
+    query, qp = lin_fused
+    cards = dict(_cards(query))
+    cards["r"] = 2**31
+    with pytest.raises(PlanWidthError, match="input cardinality"):
+        check_widths(qp, cards)
+
+
+def test_widths_clean_plan_has_no_errors(lin_cascade, lin_fused):
+    for query, qp in (lin_cascade, lin_fused):
+        for diag in analyze_widths(qp, _cards(query)):
+            assert diag.severity == "hazard"
+
+
+# --------------------------------------------------------------------------
+# executor: typed errors, execute-time verification gate
+# --------------------------------------------------------------------------
+
+def test_plan_errors_subclass_value_error():
+    for exc_type in (PlanStructureError, PlanSchemaError,
+                     PlanRefcountError, PlanPerRError, PlanWidthError):
+        assert issubclass(exc_type, PlanValidationError)
+        assert issubclass(exc_type, ValueError)
+
+
+def test_executor_unknown_op_is_typed(lin_cascade):
+    query, qp = lin_cascade
+    bad0 = dataclasses.replace(qp.steps[0], op="scan")
+    bad = dataclasses.replace(qp, steps=(bad0,) + qp.steps[1:])
+    with pytest.raises(PlanStructureError):
+        execute_plan(bad, dict(query.relations))
+
+
+def test_executor_per_r_on_cyclic_is_typed(rng):
+    query = _triangle(rng)
+    qp = planner.plan_query(query, _cards(query), m_budget=64,
+                            strategy="3way")
+    bad_root = dataclasses.replace(qp.steps[0], per_r_key="a")
+    with pytest.raises(PlanPerRError):
+        execute_plan(dataclasses.replace(qp, steps=(bad_root,)),
+                     dict(query.relations))
+
+
+def test_execute_time_verification_gate(monkeypatch, lin_cascade):
+    query, qp = lin_cascade
+    bad = dataclasses.replace(qp, steps=tuple(reversed(qp.steps)))
+    monkeypatch.setenv("REPRO_VERIFY_PLANS", "1")
+    with pytest.raises(PlanStructureError):
+        execute_plan(bad, dict(query.relations))
+
+
+# --------------------------------------------------------------------------
+# arena sanitizer
+# --------------------------------------------------------------------------
+
+def test_sanitizer_shadow_clean_walk(lin_cascade):
+    query, qp = lin_cascade
+    inter = qp.steps[0].out
+    shadow = ArenaShadow(qp, query.relations, keep_intermediates=False)
+    shadow.on_produce(inter)
+    for name in ("r", "s", inter, "t"):
+        shadow.on_release(name)
+    shadow.on_drop(inter)
+    shadow.finish({})
+
+
+def test_sanitizer_shadow_double_release(lin_cascade):
+    query, qp = lin_cascade
+    shadow = ArenaShadow(qp, query.relations, keep_intermediates=False)
+    shadow.on_release("r")
+    with pytest.raises(ArenaSanitizerError, match="double release"):
+        shadow.on_release("r")
+    with pytest.raises(ArenaSanitizerError, match="no step"):
+        shadow.on_release("%i9")
+
+
+def test_sanitizer_shadow_drop_before_last_consumer(lin_cascade):
+    query, qp = lin_cascade
+    inter = qp.steps[0].out
+    shadow = ArenaShadow(qp, query.relations, keep_intermediates=False)
+    shadow.on_produce(inter)
+    with pytest.raises(ArenaSanitizerError, match="consumer"):
+        shadow.on_drop(inter)
+
+
+def test_sanitizer_shadow_leak_and_lost_consumer(lin_cascade):
+    query, qp = lin_cascade
+    inter = qp.steps[0].out
+    shadow = ArenaShadow(qp, query.relations, keep_intermediates=False)
+    shadow.on_produce(inter)
+    with pytest.raises(ArenaSanitizerError, match="unconsumed"):
+        shadow.finish({})       # nobody released anything
+    for name in ("r", "s", inter, "t"):
+        shadow.on_release(name)
+    with pytest.raises(ArenaSanitizerError, match="leaked"):
+        shadow.finish({inter: object()})
+
+
+def test_sanitizer_shadow_produce_twice_and_keep_drop(lin_cascade):
+    query, qp = lin_cascade
+    inter = qp.steps[0].out
+    shadow = ArenaShadow(qp, query.relations, keep_intermediates=True)
+    shadow.on_produce(inter)
+    with pytest.raises(ArenaSanitizerError, match="produced twice"):
+        shadow.on_produce(inter)
+    for name in ("r", "s", inter, "t"):
+        shadow.on_release(name)
+    with pytest.raises(ArenaSanitizerError, match="keep_intermediates"):
+        shadow.on_drop(inter)
+
+
+def test_sanitizer_activation_toggle(monkeypatch):
+    monkeypatch.setenv("REPRO_SANITIZE_ARENA", "0")
+    assert not arena_sanitizer.active()
+    with arena_sanitizer.enabled():
+        assert arena_sanitizer.active()
+    assert not arena_sanitizer.active()
+    monkeypatch.setenv("REPRO_SANITIZE_ARENA", "1")
+    assert arena_sanitizer.active()
+
+
+def test_sanitizer_check_residents(monkeypatch, lin_cascade):
+    query, qp = lin_cascade
+    inter = qp.steps[0].out
+    with arena_sanitizer.enabled():
+        arena_sanitizer.check_residents(qp, {inter: object()})
+        with pytest.raises(ArenaSanitizerError, match="missing"):
+            arena_sanitizer.check_residents(qp, {})
+        with pytest.raises(ArenaSanitizerError, match="unexpected"):
+            arena_sanitizer.check_residents(
+                qp, {inter: object(), "%i9": object()})
+    # inactive -> no-op even on divergent residents
+    monkeypatch.setenv("REPRO_SANITIZE_ARENA", "0")
+    arena_sanitizer.check_residents(qp, {})
+
+
+def test_sanitizer_clean_execution(rng):
+    query, data = _linear_chain(rng)
+    want = oracle_linear3_count(data["r"]["b"], data["s"]["b"],
+                                data["s"]["c"], data["t"]["c"])
+    with arena_sanitizer.enabled():
+        sess = JoinSession(m_budget=128)
+        assert int(sess.execute(query, strategy="cascade").count) == want
+        assert int(sess.execute(query, strategy="3way").count) == want
+
+
+def test_sanitizer_streaming_ingest(rng):
+    query, _ = _linear_chain(rng)
+    d = 25
+    with arena_sanitizer.enabled():
+        sess = JoinSession(m_budget=128)
+        sq = sess.watch(query)
+        for _ in range(2):
+            rel = query.relations["s"]
+            rel.append(**{c: rng.integers(0, d, 40).astype(np.int32)
+                          for c in rel.columns})
+        want = int(JoinSession(m_budget=128).execute(query).count)
+        assert sq.count == want
+        sq.close()
+
+
+# --------------------------------------------------------------------------
+# invariant lint
+# --------------------------------------------------------------------------
+
+def test_lint_clean_on_repo_source():
+    import repro
+    src = Path(repro.__file__).resolve().parent
+    assert lint_invariants.lint_paths([src]) == []
+
+
+def test_lint_flags_each_rule(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "import numpy as np\n"
+        "def f(rel, x):\n"
+        "    rel.columns['a'] = x\n"
+        "    rel.valid = x\n"
+        "    object.__setattr__(rel, 'columns', {})\n"
+        "    u = np.unique(x)\n"
+        "    s = -0x7FFFFFFF\n"
+        "    tot = np.sum(x, dtype=np.float32)\n"
+        "    tot2 = x.astype(np.float32).sum()\n"
+        "    return u, s, tot, tot2\n")
+    findings = lint_invariants.lint_file(bad)
+    rules = [f.split("[")[1].split("]")[0] for f in findings]
+    assert rules.count("relation-mutation") == 3
+    assert rules.count("np-unique") == 1
+    assert rules.count("sentinel-literal") == 1
+    assert rules.count("float-count-accum") == 2
+
+
+def test_lint_pallas_gate(tmp_path):
+    f = tmp_path / "kern.py"
+    f.write_text(
+        "import jax.experimental.pallas as pl\n"
+        "def g(k, o, _interpret):\n"
+        "    a = pl.pallas_call(k, out_shape=o)\n"
+        "    b = pl.pallas_call(k, out_shape=o, interpret=True)\n"
+        "    if _interpret:\n"
+        "        c = pl.pallas_call(k, out_shape=o, interpret=True)\n"
+        "    return a, b, c\n")
+    findings = lint_invariants.lint_file(f)
+    assert len(findings) == 2
+    assert all("pallas-gate" in x for x in findings)
+    assert not any(":6:" in x for x in findings)   # the gated call is fine
+
+
+def test_lint_allows_implementation_files(tmp_path):
+    core = tmp_path / "core"
+    core.mkdir()
+    rel_py = core / "relation.py"
+    rel_py.write_text("def f(rel, x):\n"
+                      "    rel.columns['a'] = x\n"
+                      "    s = -0x7FFFFFFF\n"
+                      "    return s\n")
+    assert lint_invariants.lint_file(rel_py) == []
+    ref_py = core / "reference.py"
+    ref_py.write_text("import numpy as np\n"
+                      "def g(x):\n"
+                      "    return np.unique(x)\n")
+    assert lint_invariants.lint_file(ref_py) == []
+
+
+# --------------------------------------------------------------------------
+# calibration persistence
+# --------------------------------------------------------------------------
+
+def _bench_record():
+    return {"shapes": {"cascade_4way": {
+        "fused_root_s": 2.0, "binary_tail_s": 1.0,
+        "model_t3_s": 0.5, "model_tc_s": 0.25}}}
+
+
+def test_calibration_file_roundtrip(tmp_path):
+    out = tmp_path / "cal.json"
+    cal = calibrate.refresh_calibration_file(_bench_record(), out)
+    assert cal.fused3_scale == pytest.approx(4.0)
+    assert cal.cascade_scale == pytest.approx(4.0)
+    loaded = calibrate.calibration_from_file(out)
+    assert loaded.fused3_scale == pytest.approx(cal.fused3_scale)
+    assert loaded.cascade_scale == pytest.approx(cal.cascade_scale)
+    assert loaded.source == "bench:cascade_4way"
+
+
+def test_calibration_file_never_guesses(tmp_path):
+    assert calibrate.calibration_from_file(tmp_path / "nope.json") \
+        == calibrate.IDENTITY
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    assert calibrate.calibration_from_file(bad) == calibrate.IDENTITY
+    out = tmp_path / "cal.json"
+    calibrate.refresh_calibration_file({"shapes": {}}, out)
+    assert out.exists()
+    assert calibrate.calibration_from_file(out) == calibrate.IDENTITY
+
+
+def test_session_refresh_calibration_adopts_and_clears_cache(tmp_path, rng):
+    query, _ = _linear_chain(rng)
+    sess = JoinSession(m_budget=128)
+    sess.execute(query)
+    assert sess.cache_info["size"] == 1
+    bench = tmp_path / "bench.json"
+    bench.write_text(json.dumps(_bench_record()))
+    out = tmp_path / "cal.json"
+    cal = sess.refresh_calibration(bench, out_path=out)
+    assert sess.calibration is cal
+    assert cal.source == "bench:cascade_4way"
+    assert out.exists()
+    assert sess.cache_info["size"] == 0

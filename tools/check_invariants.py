@@ -1,0 +1,22 @@
+#!/usr/bin/env python
+"""CI gate: run the repo invariant lint (``repro.analysis.lint_invariants``)
+over ``src/repro``.  Exits nonzero on any finding — the rules it enforces
+(one Relation mutation point, oracle-only np.unique, SENTINEL-derived
+sentinels, integer count accumulation, dispatch-gated interpret-only
+kernels) are the conventions the engine's exactness argument rests on.
+
+    python tools/check_invariants.py [paths...]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+from repro.analysis import lint_invariants  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(lint_invariants.main())

@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""CI gate: the plan verifier + width analysis over the bench plan corpus.
+
+Re-plans every query shape ``benchmarks/engine_bench.py`` executes — the
+three classified 3-relation kinds (linear, cyclic triangle, star), the
+4-relation chain, the 6-relation two-branch tree, a 2-relation binary
+query, a per-R pinned query — across every applicable strategy (planner
+default, forced 3way, forced cascade), then runs ``verify_plan`` and
+``check_widths`` on each.  Any validation error is a FALSE POSITIVE of the
+static analysis (the bench executes these plans exactly, so they are known
+good) and fails the job; width *hazard* diagnostics are reported but do
+not fail.
+
+Relations are generated at the bench's --quick sizes and distinct counts
+(the planner reads live cardinalities AND per-column distinct estimates
+off the relations' sketches, so the corpus must match the bench's data
+shape for the emitted plans to match).
+
+    python tools/verify_bench_plans.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.analysis.errors import PlanValidationError  # noqa: E402
+from repro.analysis.verify_plan import verify_plan  # noqa: E402
+from repro.analysis.widths import analyze_widths, check_widths  # noqa: E402
+from repro.core import planner  # noqa: E402
+from repro.core.query import Query  # noqa: E402
+from repro.core.relation import Relation  # noqa: E402
+
+
+def _rel(rng, n, cols, d):
+    return Relation.from_arrays(
+        **{c: rng.integers(0, d, size=n).astype(np.int32) for c in cols})
+
+
+def _bench_corpus(rng):
+    """(name, Query, cards, m_budget, strategies, per_r) per engine_bench
+    shape, at the bench's --quick sizes/distinct counts (the planner reads
+    distinct estimates off the relations' sketches, so the corpus data
+    must match the bench's shape for the emitted plans to match)."""
+    lin = {"r": _rel(rng, 24000, ("a", "b"), 4096),
+           "s": _rel(rng, 24000, ("b", "c"), 4096),
+           "t": _rel(rng, 24000, ("c", "d"), 4096)}
+    cyc = {"r": _rel(rng, 6000, ("a", "b"), 512),
+           "s": _rel(rng, 6000, ("b", "c"), 512),
+           "t": _rel(rng, 6000, ("c", "a"), 512)}
+    star = {"r": _rel(rng, 2000, ("a", "b"), 2048),
+            "s": _rel(rng, 120000, ("b", "c"), 2048),
+            "t": _rel(rng, 2000, ("c", "d"), 2048)}
+    chain4 = {f"r{i + 1}": _rel(rng, 12000, cols, 2048)
+              for i, cols in enumerate((("a", "b"), ("b", "c"),
+                                        ("c", "d"), ("d", "e")))}
+    tree6 = {"r1": _rel(rng, 8000, ("a", "b"), 1024),
+             "r2": _rel(rng, 8000, ("b", "c"), 1024),
+             "r3": _rel(rng, 8000, ("c", "d"), 1024),
+             "r4": _rel(rng, 8000, ("e", "f"), 1024),
+             "r5": _rel(rng, 8000, ("f", "g"), 1024),
+             "r6": _rel(rng, 8000, ("d", "g"), 1024)}
+    two = {"a_": lin["r"], "b_": lin["s"]}
+
+    def cards(rels):
+        return {name: int(rel.n) for name, rel in rels.items()}
+
+    return [
+        ("fig4ef_linear", Query(lin, [("r.b", "s.b"), ("s.c", "t.c")]),
+         cards(lin), 1024, (None, "3way", "cascade"), False),
+        ("cyclic_triangles",
+         Query(cyc, [("r.b", "s.b"), ("s.c", "t.c"), ("t.a", "r.a")]),
+         cards(cyc), 512, (None, "3way"), False),
+        ("fig4hi_star", Query(star, [("r.b", "s.b"), ("s.c", "t.c")]),
+         cards(star), 1024, (None, "3way", "cascade"), False),
+        ("session_plan_cache/per_r",
+         Query(lin, [("r.b", "s.b"), ("s.c", "t.c")]),
+         cards(lin), 1024, ("3way",), True),
+        ("cascade_4way", Query(chain4, [("r1.b", "r2.b"), ("r2.c", "r3.c"),
+                                        ("r3.d", "r4.d")]),
+         cards(chain4), 1024, (None, "3way", "cascade"), False),
+        ("plan_pipeline_6way",
+         Query(tree6, [("r1.b", "r2.b"), ("r2.c", "r3.c"),
+                       ("r4.f", "r5.f"), ("r3.d", "r6.d"),
+                       ("r5.g", "r6.g")]),
+         cards(tree6), 1024, (None, "3way", "cascade"), False),
+        ("binary_2rel", Query(two, [("a_.b", "b_.b")]),
+         cards(two), 1024, (None, "cascade"), False),
+    ]
+
+
+def main() -> int:
+    rng = np.random.default_rng(20260726)
+    failures = 0
+    hazards = 0
+    plans = 0
+    for name, query, cards, m_budget, strategies, per_r in \
+            _bench_corpus(rng):
+        for strategy in strategies:
+            label = f"{name} [strategy={strategy or 'default'}]"
+            try:
+                qp = planner.plan_query(
+                    query, cards, m_budget=m_budget, strategy=strategy,
+                    per_r_name=(dict(query.classify(cards).roles)["r"]
+                                if per_r else None))
+            except PlanValidationError as e:
+                print(f"FAIL {label}: planner raised {type(e).__name__}: "
+                      f"{e}")
+                failures += 1
+                continue
+            plans += 1
+            schemas = {nm: frozenset(rel.columns)
+                       for nm, rel in query.relations.items()}
+            try:
+                verify_plan(qp, schemas=schemas)
+                diags = check_widths(qp, cards)
+            except PlanValidationError as e:
+                print(f"FAIL {label}: {type(e).__name__}: {e}")
+                failures += 1
+                continue
+            for d in diags:
+                hazards += 1
+                print(f"  hazard {label}: {d}")
+            print(f"ok   {label}: {len(qp.steps)} step(s), "
+                  f"kind={qp.kind}, strategy={qp.strategy}")
+    print(f"verify_bench_plans: {plans} plan(s) verified, "
+          f"{failures} failure(s), {hazards} hazard diagnostic(s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
